@@ -1,0 +1,39 @@
+"""Shared benchmark utilities: timing and CSV emission.
+
+Every benchmark prints ``name,us_per_call,derived`` rows (derived carries
+the figure's scientific quantity, e.g. ENOB or fJ/Op) and returns a dict
+for EXPERIMENTS.md."""
+from __future__ import annotations
+
+import json
+import os
+import time
+
+import jax
+
+RESULTS_DIR = os.path.join(os.path.dirname(__file__), "..", "experiments", "bench")
+
+
+def time_call(fn, *args, n_iter: int = 5, warmup: int = 2) -> float:
+    """Median wall time per call in microseconds (after jit warmup)."""
+    for _ in range(warmup):
+        jax.block_until_ready(fn(*args))
+    times = []
+    for _ in range(n_iter):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn(*args))
+        times.append(time.perf_counter() - t0)
+    times.sort()
+    return times[len(times) // 2] * 1e6
+
+
+def emit(name: str, us: float, derived) -> None:
+    print(f"{name},{us:.1f},{derived}")
+
+
+def save_json(name: str, payload: dict) -> str:
+    os.makedirs(RESULTS_DIR, exist_ok=True)
+    path = os.path.join(RESULTS_DIR, f"{name}.json")
+    with open(path, "w") as f:
+        json.dump(payload, f, indent=1, default=float)
+    return path

@@ -1,0 +1,26 @@
+"""End-to-end deployment metric: per-token CIM energy for the paper's
+edge config and for each assigned architecture under the GR-CIM vs the
+conventional CIM design point (the paper's bottom-line deployment win)."""
+from repro.configs import get_config
+from repro.serving.engine import energy_report
+from benchmarks.common import emit, save_json
+
+ARCHS = ["paper-cim-120m", "qwen2-1.5b", "gemma3-1b", "mamba2-1.3b"]
+
+
+def run():
+    out = {}
+    for name in ARCHS:
+        cfg = get_config(name)
+        if not cfg.cim.enabled:
+            cfg = cfg.replace(cim=cfg.cim.with_mode("grmac"))
+        rep = energy_report(cfg)
+        out[name] = rep
+        emit(f"e2e/{name}", 0.0,
+             f"pj_per_token={rep['pj_per_token']:.1f};fj_per_op={rep['fj_per_op']:.1f}")
+    save_json("e2e_energy", out)
+    return out
+
+
+if __name__ == "__main__":
+    run()

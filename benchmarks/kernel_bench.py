@@ -1,0 +1,41 @@
+"""GR-MAC Pallas kernel benchmark: wall time (interpret mode on CPU — the
+TPU figure of merit is the lowered structure, not this wall time) and
+agreement with the jnp reference across granularities."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.formats import FP4_E2M1, FP6_E3M2, quantize
+from repro.kernels.grmac_matmul import grmac_matmul_pallas
+from repro.kernels.ref import grmac_matmul_ref
+from benchmarks.common import emit, save_json, time_call
+
+
+def run():
+    key = jax.random.PRNGKey(0)
+    kx, kw = jax.random.split(key)
+    m = k = n = 256
+    x = jax.random.uniform(kx, (m, k), minval=-1, maxval=1)
+    w = quantize(jax.random.uniform(kw, (k, n), minval=-1, maxval=1), FP4_E2M1)
+    out = {}
+    for gran in ["conv", "row", "unit"]:
+        kwargs = dict(fmt_x=FP6_E3M2, fmt_w=FP4_E2M1, n_r=32, enob=8.0,
+                      granularity=gran)
+        ref = grmac_matmul_ref(x, w, **kwargs)
+        us_ref = time_call(
+            jax.jit(lambda a, b: grmac_matmul_ref(a, b, **kwargs)), x, w,
+            n_iter=3)
+        got = grmac_matmul_pallas(x, w, interpret=True, **kwargs)
+        ok = bool(np.allclose(np.asarray(got), np.asarray(ref), atol=1e-5))
+        us_k = time_call(
+            lambda a, b: grmac_matmul_pallas(a, b, interpret=True, **kwargs),
+            x, w, n_iter=1, warmup=1)
+        out[gran] = {"ref_us": us_ref, "kernel_interpret_us": us_k,
+                     "allclose": ok}
+        emit(f"kernel/{gran}", us_ref, f"allclose={ok}")
+    save_json("kernel_bench", out)
+    return out
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,49 @@
+"""Interactive-ish design-space exploration: pick a workload's dynamic-range
+and precision needs, get the energy-optimal CIM configuration (the paper's
+Fig. 12 as a tool).
+
+Run:  PYTHONPATH=src python examples/design_explorer.py --sqnr 35 --dr 60
+"""
+import argparse
+import math
+
+import jax
+
+from repro.core import dse as S
+from repro.core import formats as F
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--sqnr", type=float, default=35.0, help="target SQNR dB")
+    ap.add_argument("--dr", type=float, default=60.0, help="target DR dB")
+    ap.add_argument("--n_r", type=int, default=32)
+    args = ap.parse_args()
+
+    nm = max(1, math.ceil((args.sqnr - 10.79) / 6.02))
+    key = jax.random.PRNGKey(0)
+    print(f"target: SQNR>={args.sqnr} dB (N_M={nm}), DR>={args.dr} dB")
+    best = None
+    for ne in (1, 2, 3, 4):
+        fmt = F.FPFormat(ne, nm)
+        dr_db, sqnr_db = S.spec_of_format(fmt)
+        if dr_db < args.dr:
+            continue
+        pt = S.evaluate_point(key, fmt, n_r=args.n_r, n_cols=1 << 12)
+        for label, e in [("conventional", pt.conv), (f"GR[{pt.gr_arch}]", pt.gr)]:
+            if e is None:
+                continue
+            print(f"  {fmt.name}: {label:16s} {e.total:9.1f} fJ/Op "
+                  f"(ADC {pt.enob_conv if label=='conventional' else pt.enob_gr:.1f} b)"
+                  f" breakdown={ {k: round(v,1) for k,v in e.as_dict().items()} }")
+            if e.total and (best is None or e.total < best[0]):
+                best = (e.total, fmt.name, label)
+    if best:
+        print(f"==> optimal: {best[1]} via {best[2]} at {best[0]:.1f} fJ/Op")
+    else:
+        print("==> no feasible design point (DR beyond the gain-ranging span;"
+              " add global normalization)")
+
+
+if __name__ == "__main__":
+    main()

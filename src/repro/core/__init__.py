@@ -1,0 +1,35 @@
+"""Core reproduction of the paper's contribution: formats, MAC signal chains,
+ADC requirement analysis, energy models, and design-space exploration."""
+from .cim_config import CIMConfig
+from .formats import (
+    FP4_E2M1,
+    FP6_E2M3,
+    FP6_E3M2,
+    FP8_E4M3,
+    FPFormat,
+    IntFormat,
+    decompose,
+    int_quantize,
+    quantize,
+    sqnr_db,
+)
+from .mac import adc_quantize, gr_mac_row, gr_mac_unit, int_mac, n_eff
+
+__all__ = [
+    "CIMConfig",
+    "FPFormat",
+    "IntFormat",
+    "FP4_E2M1",
+    "FP6_E2M3",
+    "FP6_E3M2",
+    "FP8_E4M3",
+    "quantize",
+    "decompose",
+    "int_quantize",
+    "sqnr_db",
+    "adc_quantize",
+    "int_mac",
+    "gr_mac_row",
+    "gr_mac_unit",
+    "n_eff",
+]

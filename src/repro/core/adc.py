@@ -1,0 +1,121 @@
+"""Monte-Carlo ADC resolution (ENOB) requirement solver (paper §IV-A).
+
+The ADC must keep the noise it introduces at least 6 dB below the output-
+referred quantization noise floor of the input format:
+
+    SNR_ADC >= SQNR_out + 6 dB
+    <=>  P_adc_noise <= P_qnoise_out / 10^0.6
+
+Only *input* quantization noise is considered (Fig. 10 caption): weights are
+treated as exact signal (they are sampled on their format grid).  The ADC
+noise, referred to the dot-product output, is
+
+    P_adc = (Δ² / 12) · E[scale²]
+
+with the digital renormalization ``scale`` of the architecture (constant
+``n_r`` for the conventional INT-MAC; the data-dependent ``Σ 2^E · 2^-e_max``
+for the GR-MAC).  The required resolution follows the paper's definition
+
+    ENOB = log2(V_FS / Δ),   V_FS = 2   (bipolar full scale)
+
+and is therefore fractional-valued.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Union
+
+import jax
+import jax.numpy as jnp
+
+from .distributions import Distribution, max_entropy
+from .formats import FP4_E2M1, FPFormat, IntFormat, int_quantize, quantize
+from .mac import gr_mac_row, gr_mac_unit, int_mac
+
+__all__ = ["EnobResult", "required_enob", "ARCHS"]
+
+ARCHS = ("conv", "gr_row", "gr_unit")
+_MARGIN_DB = 6.0
+
+
+@dataclasses.dataclass
+class EnobResult:
+    enob: float             # required ADC resolution (fractional bits)
+    sqnr_out_db: float      # output-referred SQNR from input quantization
+    sig_power: float        # P(z_ref)
+    qnoise_power: float     # P(z_q - z_ref)
+    mean_scale_sq: float    # E[scale²] of the renormalization factor
+    n_eff_mean: Optional[float] = None  # GR only
+
+
+def _quantize_any(x: jax.Array, fmt: Union[FPFormat, IntFormat]) -> jax.Array:
+    if isinstance(fmt, IntFormat):
+        return int_quantize(x, fmt)
+    return quantize(x, fmt)
+
+
+def required_enob(
+    key: jax.Array,
+    arch: str,
+    dist_x: Distribution,
+    fmt_x: Union[FPFormat, IntFormat],
+    n_r: int = 32,
+    fmt_w: FPFormat = FP4_E2M1,
+    dist_w: Optional[Distribution] = None,
+    n_cols: int = 1 << 14,
+    margin_db: float = _MARGIN_DB,
+) -> EnobResult:
+    """Solve the minimum ADC ENOB for one (architecture, input condition).
+
+    ``arch``: "conv" (FP->INT direct accumulation), "gr_row", or "gr_unit".
+    GR architectures require ``fmt_x`` to be an FPFormat; with an IntFormat
+    input there is no exponent to range on and "conv" semantics apply
+    (INT-normalization reuses gr semantics through the *weight* format — pass
+    arch="gr_unit" with an IntFormat input for that case: inputs then carry a
+    single exponent bin).
+    """
+    kx, kw = jax.random.split(key)
+    shape = (n_cols, n_r)
+    x = dist_x(kx, shape)
+    if dist_w is None:
+        dist_w = max_entropy(fmt_w)
+    w_q = dist_w(kw, shape)  # already on the weight grid for max-entropy
+
+    x_q = _quantize_any(x, fmt_x)
+
+    # Output-referred input-quantization noise (the budget reference).
+    z_ref = jnp.sum(x * w_q, axis=-1)
+    z_q = jnp.sum(x_q * w_q, axis=-1)
+    p_sig = jnp.mean(jnp.square(z_ref))
+    p_qn = jnp.mean(jnp.square(z_q - z_ref))
+
+    # Renormalization-scale statistics of the architecture (ENOB-independent;
+    # pass a dummy ENOB, we only need `scale`).
+    n_eff_mean = None
+    if arch == "conv" or isinstance(fmt_x, IntFormat):
+        out = int_mac(x_q, w_q, 16.0)
+        mean_scale_sq = jnp.mean(jnp.square(out.scale))
+    elif arch == "gr_row":
+        out = gr_mac_row(x_q, w_q, fmt_x, 16.0)
+        mean_scale_sq = jnp.mean(jnp.square(out.scale))
+        n_eff_mean = float(jnp.mean(out.n_eff))
+    elif arch == "gr_unit":
+        out = gr_mac_unit(x_q, w_q, fmt_x, fmt_w, 16.0)
+        mean_scale_sq = jnp.mean(jnp.square(out.scale))
+        n_eff_mean = float(jnp.mean(out.n_eff))
+    else:
+        raise ValueError(f"unknown arch {arch!r}")
+
+    # Δ² / 12 · E[scale²] <= P_qn / 10^(margin/10)
+    p_allowed = p_qn / 10.0 ** (margin_db / 10.0)
+    delta = jnp.sqrt(12.0 * p_allowed / jnp.maximum(mean_scale_sq, 1e-30))
+    enob = jnp.log2(2.0 / delta)
+
+    return EnobResult(
+        enob=float(enob),
+        sqnr_out_db=float(10.0 * jnp.log10(p_sig / jnp.maximum(p_qn, 1e-30))),
+        sig_power=float(p_sig),
+        qnoise_power=float(p_qn),
+        mean_scale_sq=float(mean_scale_sq),
+        n_eff_mean=n_eff_mean,
+    )

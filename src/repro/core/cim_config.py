@@ -1,0 +1,60 @@
+"""CIMConfig — how the GR-CIM technique is applied inside a model.
+
+This is the knob exposed in every architecture config (``cim`` field) and
+consumed by ``repro.kernels.ops.cim_matmul`` and the model layers.
+
+Modes
+-----
+off        plain bf16/f32 matmuls (digital baseline).
+fakequant  inputs/weights quantized to the CIM formats with straight-through
+           gradients (QAT); accumulation is exact. Trains models that will
+           tolerate CIM numerics.
+grmac      full GR-MAC signal-chain simulation: per-K-block mantissa
+           accumulation, ADC quantization at the configured ENOB, digital
+           renormalization. Deployment-faithful inference numerics.
+
+``granularity`` selects the paper's normalization domain (§III-C); ``n_r``
+is the CIM array depth, i.e. the K-block over which one analog accumulation
++ one ADC conversion happens.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+from .formats import FP4_E2M1, FP6_E3M2, FPFormat
+
+__all__ = ["CIMConfig"]
+
+
+@dataclasses.dataclass(frozen=True)
+class CIMConfig:
+    mode: str = "off"                  # off | fakequant | grmac
+    granularity: str = "row"           # row | unit
+    fmt_x: FPFormat = FP6_E3M2
+    fmt_w: FPFormat = FP4_E2M1
+    n_r: int = 32                      # CIM array rows == matmul K-block
+    enob: Optional[float] = None       # None -> solve from core.adc defaults
+    # Per-tensor pre-scale: activations are scaled into [-1, 1] by their
+    # running absmax before quantization (standard PTQ practice); the scale
+    # is folded back after the MAC.
+    dynamic_prescale: bool = True
+    # Apply the CIM path to these matmul families.
+    apply_to: tuple = ("ffn", "qkvo", "expert", "head")
+
+    @property
+    def enabled(self) -> bool:
+        return self.mode != "off"
+
+    def resolved_enob(self) -> float:
+        if self.enob is not None:
+            return self.enob
+        # Data-invariant upper bound (paper contribution C2): the uniform
+        # distribution upper-bounds the GR-MAC ADC requirement, so a static
+        # spec is safe for any input data. Solved offline (see
+        # benchmarks/fig10_enob_dr.py); 8 bits covers FP6_E3M2 / FP4 weights
+        # at N_R = 32 with margin.
+        return 8.0
+
+    def with_mode(self, mode: str) -> "CIMConfig":
+        return dataclasses.replace(self, mode=mode)

@@ -1,0 +1,105 @@
+"""Input-data distributions used for ADC requirement analysis (paper §IV-A).
+
+Three distributions define the hardware requirements:
+
+i)   Uniform            — the standard INT-CIM baseline; lower-bounds the
+                          conventional ADC requirement, upper-bounds GR-MAC's.
+ii)  Maximum entropy    — the floating-point analogue of the uniform baseline:
+                          uniformly randomized format bits (format-dependent).
+iii) Gaussian + outliers — empirical LLM-activation stress test: a narrow
+                          Gaussian core plus rare uniform high-magnitude
+                          outliers (ε = 0.01, k = 50 relative to the core 3σ).
+
+All samplers return values in [-1, 1] (full scale). ``scale`` shrinks the
+distribution into the lower part of the range — used to model inputs that
+occupy only the "narrowest valid bounds" of a wide-DR format (§IV-B).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Optional
+
+import jax
+import jax.numpy as jnp
+
+from .formats import FPFormat, max_entropy_sample
+
+__all__ = [
+    "Distribution",
+    "uniform",
+    "gaussian_clipped",
+    "gaussian_outliers",
+    "max_entropy",
+    "DISTRIBUTIONS",
+]
+
+
+@dataclasses.dataclass(frozen=True)
+class Distribution:
+    """A named sampler: (key, shape) -> array in [-1, 1]."""
+
+    name: str
+    sample: Callable[[jax.Array, tuple], jax.Array]
+
+    def __call__(self, key: jax.Array, shape: tuple) -> jax.Array:
+        return self.sample(key, shape)
+
+
+def uniform(scale: float = 1.0) -> Distribution:
+    def _s(key, shape):
+        return jax.random.uniform(key, shape, minval=-scale, maxval=scale)
+
+    return Distribution(f"uniform(x{scale:g})", _s)
+
+
+def gaussian_clipped(n_sigma: float = 4.0, scale: float = 1.0) -> Distribution:
+    """Zero-mean normal clipped to ±n_sigma, full scale at the clip point.
+
+    This is the Fig. 4 illustration condition (normal clipped to 4σ).
+    """
+    sigma = scale / n_sigma
+
+    def _s(key, shape):
+        x = sigma * jax.random.normal(key, shape)
+        return jnp.clip(x, -scale, scale)
+
+    return Distribution(f"gauss_clip{n_sigma:g}s", _s)
+
+
+def gaussian_outliers(eps: float = 0.01, k: float = 50.0, scale: float = 1.0) -> Distribution:
+    """Gaussian core + uniform high-magnitude outliers (§IV-A iii).
+
+    The outlier magnitude is ``k`` relative to the core's 3σ; full scale is
+    set so the largest outliers just avoid clipping: sigma = scale / (3 k).
+    With probability ``eps`` a sample is drawn uniformly over the full range.
+    """
+    sigma = scale / (3.0 * k)
+
+    def _s(key, shape):
+        kc, ko, kb = jax.random.split(key, 3)
+        core = jnp.clip(sigma * jax.random.normal(kc, shape), -scale, scale)
+        outl = jax.random.uniform(ko, shape, minval=-scale, maxval=scale)
+        take = jax.random.bernoulli(kb, eps, shape)
+        return jnp.where(take, outl, core)
+
+    return Distribution(f"gauss+outliers(e{eps:g},k{k:g})", _s)
+
+
+def max_entropy(fmt: FPFormat, scale: float = 1.0) -> Distribution:
+    """Uniformly randomized bits of ``fmt`` — the quantizer prior (§IV-A ii)."""
+
+    def _s(key, shape):
+        return scale * max_entropy_sample(key, shape, fmt)
+
+    return Distribution(f"maxent({fmt.name})", _s)
+
+
+def DISTRIBUTIONS(fmt: Optional[FPFormat] = None) -> dict:
+    """The paper's three evaluation distributions, keyed by short name."""
+    d = {
+        "uniform": uniform(),
+        "gauss_outliers": gaussian_outliers(),
+    }
+    if fmt is not None:
+        d["max_entropy"] = max_entropy(fmt)
+    return d

@@ -1,0 +1,130 @@
+"""Design-space exploration over (dynamic range, precision) — paper Fig. 12.
+
+Each design point is an input format (``n_exp``, ``n_man``).  Precision
+(SQNR) is set by the mantissa; excess dynamic range beyond the minimum needed
+for that SQNR is set by the exponent range (``e_max - 1`` octaves).
+
+Per §IV-B, converters are dimensioned to robustly process *a uniform input
+scaled to its narrowest valid bounds* (twice the minimum normal value): the
+excess DR manifests as a 2^-(e_max-1) amplitude reduction for the
+conventional CIM, while the GR-MAC renormalizes it away.  Weights are
+FP4_E2M1 max-entropy throughout (information-optimal first-order
+approximation of empirical weights).
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Optional
+
+import jax
+
+from .adc import required_enob
+from .distributions import uniform
+from .energy import CimDesign, EnergyBreakdown, TechParams, energy_per_op_fj
+from .formats import FP4_E2M1, FPFormat, IntFormat
+
+__all__ = ["DsePoint", "explore", "spec_of_format", "GAIN_RANGE_LIMIT_BITS"]
+
+# Conservative C-2C linearity limit on the coupling-ladder span (§III-D1).
+GAIN_RANGE_LIMIT_BITS = 6
+
+
+@dataclasses.dataclass
+class DsePoint:
+    fmt_x: FPFormat | IntFormat
+    dr_db: float
+    sqnr_db: float
+    conv: Optional[EnergyBreakdown]      # None when outside conventional reach
+    gr: Optional[EnergyBreakdown]        # best GR granularity (None if infeasible)
+    gr_arch: Optional[str]
+    enob_conv: float
+    enob_gr: float
+
+
+def spec_of_format(fmt: FPFormat | IntFormat) -> tuple[float, float]:
+    """(DR_dB, SQNR_dB) coordinates of a format in the design space.
+
+    DR counts total resolvable bits: information bits (mantissa incl. the
+    implicit leading one) plus excess-range octaves.  SQNR follows the
+    6.02·N_M + 10.79 dB floating-point formula (stored mantissa bits).
+    """
+    if isinstance(fmt, IntFormat):
+        bits = fmt.bits
+        return 6.02 * bits, 6.02 * (bits - 1) + 1.76
+    dr_bits = (fmt.n_man + 2) + (fmt.e_max - 1)  # sign+implicit+stored + range
+    return 6.02 * dr_bits, 6.02 * fmt.n_man + 10.79
+
+
+def _narrowest_uniform(fmt: FPFormat | IntFormat):
+    """Uniform input at the narrowest valid bounds of the format (§IV-B)."""
+    if isinstance(fmt, IntFormat):
+        return uniform(1.0)
+    return uniform(min(1.0, 2.0 * fmt.min_normal))
+
+
+def evaluate_point(
+    key: jax.Array,
+    fmt_x: FPFormat | IntFormat,
+    fmt_w: FPFormat = FP4_E2M1,
+    n_r: int = 32,
+    n_c: int = 32,
+    p: TechParams = TechParams(),
+    n_cols: int = 1 << 13,
+) -> DsePoint:
+    dist = _narrowest_uniform(fmt_x)
+    dr_db, sqnr_db = spec_of_format(fmt_x)
+
+    res_conv = required_enob(key, "conv", dist, fmt_x, n_r=n_r, fmt_w=fmt_w, n_cols=n_cols)
+    conv = energy_per_op_fj(
+        CimDesign("conv", fmt_x, fmt_w, res_conv.enob, n_r, n_c), p
+    )
+
+    best = None
+    best_arch = None
+    best_enob = float("nan")
+    if isinstance(fmt_x, IntFormat):
+        cand = ["gr_int"]
+    else:
+        cand = ["gr_row", "gr_unit"]
+    for arch in cand:
+        solver_arch = "gr_unit" if arch == "gr_int" else arch
+        res = required_enob(key, solver_arch, dist, fmt_x, n_r=n_r, fmt_w=fmt_w, n_cols=n_cols)
+        d = CimDesign(arch, fmt_x, fmt_w, res.enob, n_r, n_c)
+        if d.gain_range_bits > GAIN_RANGE_LIMIT_BITS:
+            continue  # outside the coupling ladder's linear span
+        e = energy_per_op_fj(d, p)
+        if best is None or e.total < best.total:
+            best, best_arch, best_enob = e, arch, res.enob
+
+    return DsePoint(
+        fmt_x=fmt_x,
+        dr_db=dr_db,
+        sqnr_db=sqnr_db,
+        conv=conv,
+        gr=best,
+        gr_arch=best_arch,
+        enob_conv=res_conv.enob,
+        enob_gr=best_enob,
+    )
+
+
+def explore(
+    key: jax.Array,
+    n_exps=(0, 1, 2, 3, 4),
+    n_mans=(1, 2, 3, 4, 5, 6),
+    fmt_w: FPFormat = FP4_E2M1,
+    n_r: int = 32,
+    n_c: int = 32,
+    p: TechParams = TechParams(),
+    n_cols: int = 1 << 13,
+) -> list[DsePoint]:
+    """Sweep the (n_exp × n_man) grid.  n_exp == 0 denotes an INT format of
+    equivalent precision (sign + implicit + stored mantissa bits)."""
+    pts = []
+    for ne in n_exps:
+        for nm in n_mans:
+            fmt = IntFormat(nm + 2) if ne == 0 else FPFormat(ne, nm)
+            key, sub = jax.random.split(key)
+            pts.append(evaluate_point(sub, fmt, fmt_w, n_r, n_c, p, n_cols))
+    return pts

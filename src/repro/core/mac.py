@@ -1,0 +1,173 @@
+"""Bit-faithful simulation of the conventional INT-MAC and the GR-MAC columns.
+
+A "column" is one analog accumulation line with ``n_r`` contributing unit
+cells (paper Fig. 4). All simulators take already *format-quantized* inputs
+``x_q`` and weights ``w_q`` of shape ``(..., n_r)`` and return the analog
+compute-line voltage ``v`` (always in [-1, 1]), the digital renormalization
+``scale`` such that the reconstructed dot product is ``v * scale``, and the
+final ADC-quantized output ``z_hat``.
+
+Signal chains
+-------------
+Conventional INT-MAC (§III-B1):
+    v = (1/n_r) Σ_i x_i w_i                    (uniform charge averaging)
+    z_hat = Q_ADC(v) * n_r
+
+GR-MAC, row normalization (§III-C2): the cell multiplies the *mantissa*
+voltage by the (pre-aligned) weight and couples with C ∝ 2^{E_x,i}:
+    v = Σ_i (s_i M_i w_i) 2^{E_i}  /  Σ_i 2^{E_i}
+    z_hat = Q_ADC(v) * (Σ_i 2^{E_i}) * 2^{-e_max}
+
+GR-MAC, unit normalization (§III-C1): weights are also normalized and the
+coupling uses E = E_x + E_W:
+    v = Σ_i (s_i M_x,i M_W,i) 2^{E_x,i + E_W,i}  /  Σ_i 2^{E_x,i + E_W,i}
+    z_hat = Q_ADC(v) * (Σ_i 2^{E_x,i+E_W,i}) * 2^{-2 e_max}
+
+Both GR variants reconstruct Σ x_i w_i exactly when the ADC is ideal; the
+architectural difference is purely the *voltage-domain amplitude* presented
+to the ADC, which sets the excess resolution requirement.
+
+An optional multiplicative capacitor-mismatch model (Pelgrom, §III-E1) is
+provided: each coupling capacitor 2^{E} C_lsb receives a relative error
+sigma(dC/C) = K_C / sqrt(C) with C in fF.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from .formats import FPFormat, decompose, pow2i
+
+__all__ = [
+    "adc_quantize",
+    "MacOutput",
+    "int_mac",
+    "gr_mac_row",
+    "gr_mac_unit",
+    "n_eff",
+    "mismatch_gains",
+]
+
+
+def adc_quantize(v: jax.Array, enob: jax.Array | float) -> jax.Array:
+    """Mid-tread uniform ADC on [-1, 1] with step 2 / 2**enob.
+
+    ``enob`` may be fractional (the paper specifies ENOB = log2(V_FS / Δ));
+    we honour the implied step size exactly.
+    """
+    delta = 2.0 / jnp.exp2(jnp.asarray(enob, v.dtype))
+    return jnp.clip(jnp.round(v / delta) * delta, -1.0, 1.0)
+
+
+@dataclasses.dataclass
+class MacOutput:
+    v: jax.Array       # analog compute-line voltage in [-1, 1]
+    scale: jax.Array   # digital renormalization factor
+    z: jax.Array       # ideal dot product (no ADC), == v * scale
+    z_hat: jax.Array   # ADC-quantized output, == Q(v) * scale
+    n_eff: Optional[jax.Array] = None  # effective contributor count (GR only)
+
+
+def int_mac(x_q: jax.Array, w_q: jax.Array, enob: jax.Array | float) -> MacOutput:
+    """Conventional charge-domain INT-MAC column (uniform averaging)."""
+    n_r = x_q.shape[-1]
+    v = jnp.sum(x_q * w_q, axis=-1) / n_r
+    scale = jnp.asarray(float(n_r), x_q.dtype)
+    z = v * scale
+    z_hat = adc_quantize(v, enob) * scale
+    return MacOutput(v=v, scale=jnp.broadcast_to(scale, v.shape), z=z, z_hat=z_hat)
+
+
+def n_eff(gains: jax.Array) -> jax.Array:
+    """Effective number of contributors for weighted averaging (§III-B2).
+
+    N_eff = (Σ g_i)^2 / Σ g_i^2  with g_i = 2^{E_i}.
+    """
+    s1 = jnp.sum(gains, axis=-1)
+    s2 = jnp.sum(jnp.square(gains), axis=-1)
+    return jnp.square(s1) / jnp.maximum(s2, 1e-30)
+
+
+def mismatch_gains(
+    key: jax.Array,
+    e: jax.Array,
+    k_c_pct_sqrt_ff: float,
+    c_unit_ff: float = 1.0,
+) -> jax.Array:
+    """Per-cell multiplicative coupling-gain error from capacitor mismatch.
+
+    sigma(dC/C) = K_C / sqrt(C),  C = 2^{E-1} * c_unit_ff   (coupling ladder).
+    ``k_c_pct_sqrt_ff`` is in %·sqrt(fF) (paper range 0.45–0.85).
+    """
+    c = jnp.exp2(e.astype(jnp.float32) - 1.0) * c_unit_ff
+    sigma = (k_c_pct_sqrt_ff / 100.0) / jnp.sqrt(c)
+    return 1.0 + sigma * jax.random.normal(key, e.shape)
+
+
+def gr_mac_row(
+    x_q: jax.Array,
+    w_q: jax.Array,
+    fmt_x: FPFormat,
+    enob: jax.Array | float,
+    gain_err: Optional[jax.Array] = None,
+) -> MacOutput:
+    """GR-MAC with row (input-only) normalization.
+
+    Weights arrive pre-aligned (their true values in [-1, 1]); only inputs
+    are decomposed and gain-ranged by 2^{E_x}.
+    """
+    s, m, e = decompose(x_q, fmt_x)
+    g = pow2i(e, x_q.dtype)
+    if gain_err is not None:
+        g = g * gain_err
+    num = jnp.sum(s * m * w_q * g, axis=-1)
+    den = jnp.sum(g, axis=-1)
+    v = num / den
+    scale = den * 2.0 ** (-fmt_x.e_max)
+    z = v * scale
+    z_hat = adc_quantize(v, enob) * scale
+    return MacOutput(v=v, scale=scale, z=z, z_hat=z_hat, n_eff=n_eff(g))
+
+
+def gr_mac_unit(
+    x_q: jax.Array,
+    w_q: jax.Array,
+    fmt_x: FPFormat,
+    fmt_w: FPFormat,
+    enob: jax.Array | float,
+    gain_err: Optional[jax.Array] = None,
+) -> MacOutput:
+    """GR-MAC with unit (input + weight) normalization."""
+    sx, mx, ex = decompose(x_q, fmt_x)
+    sw, mw, ew = decompose(w_q, fmt_w)
+    g = pow2i(ex + ew, x_q.dtype)
+    if gain_err is not None:
+        g = g * gain_err
+    num = jnp.sum(sx * sw * mx * mw * g, axis=-1)
+    den = jnp.sum(g, axis=-1)
+    v = num / den
+    scale = den * 2.0 ** (-(fmt_x.e_max + fmt_w.e_max))
+    z = v * scale
+    z_hat = adc_quantize(v, enob) * scale
+    return MacOutput(v=v, scale=scale, z=z, z_hat=z_hat, n_eff=n_eff(g))
+
+
+def global_normalize(x_q: jax.Array, fmt: FPFormat, int_bits: int):
+    """Block-wise FP->INT conversion (the conventional pipeline, §II-B2).
+
+    Aligns every value in the trailing-axis block to the block maximum
+    exponent (M_i << (E_max_blk - E_i)) on an ``int_bits``-wide integer
+    grid. Returns (aligned integer values in [-1, 1], block scale 2^(E-e_max))
+    such that x ≈ aligned * scale. Truncation of shifted-out LSBs is the
+    fidelity cost the GR-MAC avoids.
+    """
+    _, _, e = decompose(x_q, fmt)
+    e_blk = jnp.max(e, axis=-1, keepdims=True)
+    scale = pow2i(e_blk - fmt.e_max, x_q.dtype)
+    normalized = x_q / scale                      # in [-1, 1] by construction
+    step = 2.0 ** (1 - int_bits)
+    aligned = jnp.round(normalized / step) * step  # truncating INT grid
+    return jnp.clip(aligned, -1.0, 1.0), scale

@@ -1,0 +1,2 @@
+from repro.data.pipeline import DataConfig, FileTokens, SyntheticLM, make_pipeline
+__all__ = ["DataConfig", "SyntheticLM", "FileTokens", "make_pipeline"]

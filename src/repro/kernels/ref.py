@@ -1,0 +1,89 @@
+"""Pure-jnp oracle for the GR-MAC matmul kernels.
+
+Semantics contract (shared with the Pallas kernel, validated in tests):
+
+The K dimension is processed in blocks of ``n_r`` (one analog CIM column
+accumulation + one ADC conversion per block).  Inputs are assumed already
+*pre-scaled* into [-1, 1]; weights arrive already quantized onto their format
+grid.  All math in float32.
+
+  row normalization:
+      xq   = Q_fmt_x(x)                            (per element)
+      g    = 2^{E(xq)}                             (input gains)
+      num  = xq_blk @ wq_blk                       (values matmul)
+      den  = Σ_k g_blk                             (per row)
+      v    = num * 2^{e_max_x} / den               (compute-line voltage)
+      out += Q_ADC(v) * den * 2^{-e_max_x}
+
+  unit normalization:
+      additionally gw = 2^{E(wq)} and den = g_blk @ gw_blk (per row×col),
+      v = num * 2^{e_max_x + e_max_w} / den, renormalized accordingly.
+
+  conv (conventional FP->INT direct accumulation, the paper's baseline):
+      v = (xq_blk @ wq_blk) / n_r;  out += Q_ADC(v) * n_r
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.core.formats import FPFormat, decompose, pow2i, quantize
+from repro.core.mac import adc_quantize
+
+__all__ = ["grmac_matmul_ref"]
+
+
+def _block(x: jnp.ndarray, n_r: int) -> jnp.ndarray:
+    m, k = x.shape
+    assert k % n_r == 0, f"K={k} not a multiple of n_r={n_r}"
+    return x.reshape(m, k // n_r, n_r)
+
+
+def grmac_matmul_ref(
+    x: jnp.ndarray,
+    wq: jnp.ndarray,
+    *,
+    fmt_x: FPFormat,
+    fmt_w: FPFormat,
+    n_r: int = 32,
+    enob: float = 8.0,
+    granularity: str = "row",
+) -> jnp.ndarray:
+    """Reference GR-MAC matmul: (M, K) @ (K, N) -> (M, N), float32."""
+    x = x.astype(jnp.float32)
+    wq = wq.astype(jnp.float32)
+    m, k = x.shape
+    k2, n = wq.shape
+    assert k == k2
+
+    xq = quantize(x, fmt_x)
+    xb = _block(xq, n_r)                     # (M, B, n_r)
+    wb = wq.reshape(k // n_r, n_r, n)        # (B, n_r, N)
+
+    # values matmul per block: (M, B, N)
+    num = jnp.einsum("mbk,bkn->mbn", xb, wb, preferred_element_type=jnp.float32)
+
+    if granularity == "conv":
+        v = num / n_r
+        z = adc_quantize(v, enob) * n_r
+        return jnp.sum(z, axis=1)
+
+    _, _, ex = decompose(xq, fmt_x)
+    gx = pow2i(ex)
+    gxb = _block(gx, n_r)                    # (M, B, n_r)
+
+    if granularity == "row":
+        den = jnp.sum(gxb, axis=-1)          # (M, B)
+        v = num * 2.0**fmt_x.e_max / den[:, :, None]
+        z = adc_quantize(v, enob) * (den[:, :, None] * 2.0**-fmt_x.e_max)
+        return jnp.sum(z, axis=1)
+
+    if granularity == "unit":
+        _, _, ew = decompose(wq, fmt_w)
+        gw = pow2i(ew).reshape(k // n_r, n_r, n)
+        den = jnp.einsum("mbk,bkn->mbn", gxb, gw, preferred_element_type=jnp.float32)
+        scale = 2.0 ** (fmt_x.e_max + fmt_w.e_max)
+        v = num * scale / den
+        z = adc_quantize(v, enob) * (den / scale)
+        return jnp.sum(z, axis=1)
+
+    raise ValueError(f"unknown granularity {granularity!r}")

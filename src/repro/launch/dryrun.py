@@ -1,0 +1,169 @@
+import os
+os.environ["XLA_FLAGS"] = (
+    "--xla_force_host_platform_device_count=512 "
+    + os.environ.get("XLA_FLAGS", "")
+)
+# ^ MUST precede every other import (jax locks device count on first init).
+
+"""Multi-pod dry-run: lower + compile every (architecture × input shape)
+cell on the production meshes, print memory/cost analysis, extract roofline
+terms, and persist JSON per cell under experiments/dryrun/.
+
+Usage:
+    python -m repro.launch.dryrun --arch qwen2-1.5b --shape decode_32k
+    python -m repro.launch.dryrun --all [--multi-pod] [--cim grmac]
+"""
+import argparse
+import json
+import time
+import traceback
+
+import jax
+
+from repro.configs import get_config
+from repro.launch.mesh import make_production_mesh
+from repro.launch.roofline import roofline_from_compiled
+from repro.launch.specs import SHAPES, cell_is_runnable, make_cell
+from repro.parallel.sharding import use_mesh
+
+ARCHS = [
+    "arctic-480b", "grok-1-314b", "qwen2-1.5b", "gemma3-1b", "granite-8b",
+    "stablelm-3b", "mamba2-1.3b", "recurrentgemma-9b", "musicgen-medium",
+    "chameleon-34b",
+]
+
+
+def run_cell(arch: str, shape: str, multi_pod: bool, cim: str = "off",
+             out_dir: str = "experiments/dryrun", verbose: bool = True,
+             roofline_mode: bool = False, overrides: dict | None = None,
+             tag_suffix: str = "", microbatches: int = 1,
+             grad_compression: bool = False, cache_dtype: str = "bfloat16",
+             algorithm: str = "adamw", layout: str = "fsdp",
+             model_parallel: int = 16):
+    """One dry-run cell.
+
+    roofline_mode=False: production lowering (scan over layers, chunked
+      attention) — proves compile + per-device memory.
+    roofline_mode=True: unrolled layers + unchunked attention so
+      cost_analysis / collective parsing count every op exactly once
+      (scan bodies are otherwise counted once, not x trip-count).
+    """
+    mesh = make_production_mesh(multi_pod=multi_pod,
+                                model_parallel=model_parallel)
+    dp = 256 // model_parallel
+    mesh_name = (f"2x{dp}x{model_parallel}" if multi_pod
+                 else f"{dp}x{model_parallel}")
+    chips = mesh.size
+    cfg = get_config(arch)
+    if cim != "off":
+        cfg = cfg.replace(cim=cfg.cim.with_mode(cim))
+    if roofline_mode:
+        cfg = cfg.replace(scan_layers=False, attn_chunk=None)
+    if overrides:
+        cfg = cfg.replace(**overrides)
+    ok, reason = cell_is_runnable(cfg, shape)
+    result = {"arch": arch, "shape": shape, "mesh": mesh_name, "cim": cim}
+    os.makedirs(out_dir, exist_ok=True)
+    tag = (f"{arch}_{shape}_{mesh_name}" + (f"_{cim}" if cim != "off" else "")
+           + ("_roofline" if roofline_mode else "") + tag_suffix)
+    path = os.path.join(out_dir, tag + ".json")
+    if not ok:
+        result.update(status="skipped", reason=reason)
+        with open(path, "w") as f:
+            json.dump(result, f, indent=1)
+        if verbose:
+            print(f"[dryrun] {tag}: SKIPPED ({reason})")
+        return result
+
+    t0 = time.time()
+    try:
+        with use_mesh(mesh):
+            import jax.numpy as jnp
+            cell = make_cell(cfg, shape, mesh,
+                             cache_dtype=jnp.dtype(cache_dtype),
+                             microbatches=microbatches,
+                             grad_compression=grad_compression,
+                             algorithm=algorithm, layout=layout)
+            jitted = jax.jit(
+                cell.fn,
+                in_shardings=cell.in_shardings,
+                out_shardings=cell.out_shardings,
+                donate_argnums=cell.donate_argnums,
+            )
+            lowered = jitted.lower(*cell.in_specs)
+            t_lower = time.time() - t0
+            compiled = lowered.compile()
+            t_compile = time.time() - t0 - t_lower
+
+        ma = compiled.memory_analysis()
+        rep = roofline_from_compiled(
+            arch, shape, mesh_name, chips, compiled, cfg, SHAPES[shape])
+        result.update(
+            status="ok",
+            lower_s=round(t_lower, 1),
+            compile_s=round(t_compile, 1),
+            bytes_per_device={
+                "arguments": ma.argument_size_in_bytes,
+                "outputs": ma.output_size_in_bytes,
+                "temps": ma.temp_size_in_bytes,
+                "aliased": ma.alias_size_in_bytes,
+                "peak_est": ma.argument_size_in_bytes
+                + ma.output_size_in_bytes + ma.temp_size_in_bytes
+                - ma.alias_size_in_bytes,
+            },
+            cost={
+                "flops_per_device": rep.flops_per_device,
+                "bytes_per_device": rep.bytes_per_device,
+                "collective_bytes_per_device": rep.coll_bytes_per_device,
+                "collective_breakdown": rep.coll_breakdown,
+            },
+            roofline=rep.row(),
+        )
+        if verbose:
+            gb = result["bytes_per_device"]["peak_est"] / 2**30
+            print(f"[dryrun] {tag}: OK compile={t_compile:.0f}s "
+                  f"mem/dev={gb:.2f}GiB dominant={rep.dominant} "
+                  f"roofline_frac={rep.roofline_fraction:.3f}")
+    except Exception as e:  # report, don't crash the sweep
+        result.update(status="error", error=f"{type(e).__name__}: {e}",
+                      trace=traceback.format_exc()[-2000:])
+        if verbose:
+            print(f"[dryrun] {tag}: ERROR {type(e).__name__}: {e}")
+    with open(path, "w") as f:
+        json.dump(result, f, indent=1)
+    return result
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None, choices=list(SHAPES) + [None])
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--both-meshes", action="store_true")
+    ap.add_argument("--cim", default="off", choices=["off", "fakequant", "grmac"])
+    ap.add_argument("--roofline-mode", action="store_true")
+    ap.add_argument("--out", default="experiments/dryrun")
+    args = ap.parse_args()
+
+    archs = ARCHS if (args.all or args.arch is None) else [args.arch]
+    shapes = list(SHAPES) if (args.all or args.shape is None) else [args.shape]
+    meshes = [False, True] if args.both_meshes else [args.multi_pod]
+
+    n_ok = n_skip = n_err = 0
+    for mp in meshes:
+        for a in archs:
+            for s in shapes:
+                r = run_cell(a, s, mp, cim=args.cim, out_dir=args.out,
+                             roofline_mode=args.roofline_mode)
+                st = r["status"]
+                n_ok += st == "ok"
+                n_skip += st == "skipped"
+                n_err += st == "error"
+    print(f"[dryrun] done: {n_ok} ok, {n_skip} skipped, {n_err} errors")
+    if n_err:
+        raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    main()

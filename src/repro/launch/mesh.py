@@ -1,0 +1,51 @@
+"""Production mesh construction.
+
+Single pod: 16 × 16 = 256 chips, axes ("data", "model").
+Multi-pod:  2 × 16 × 16 = 512 chips, axes ("pod", "data", "model") — the
+"pod" axis carries pure data parallelism across the slow inter-pod links
+(DCN); "data" is FSDP within a pod; "model" is tensor/expert parallel on
+the fastest ICI dimension.
+
+Defined as functions (never module-level constants) so importing this
+module never touches jax device state.
+"""
+from __future__ import annotations
+
+import jax
+
+__all__ = ["make_production_mesh", "make_local_mesh", "HW"]
+
+
+class HW:
+    """TPU v5e-class hardware constants for the roofline model."""
+
+    PEAK_FLOPS_BF16 = 197e12      # per chip
+    HBM_BW = 819e9                # B/s per chip
+    ICI_BW = 50e9                 # B/s per link
+    HBM_BYTES = 16 * 2**30        # 16 GiB per chip
+    VMEM_BYTES = 128 * 2**20
+
+
+def _auto(n):
+    return (jax.sharding.AxisType.Auto,) * n
+
+
+def make_production_mesh(*, multi_pod: bool = False, model_parallel: int = 16):
+    """Production mesh over 256 (single pod) or 512 (2 pods) chips.
+
+    ``model_parallel`` re-maps the *logical* axis split over the same
+    hardware: model_parallel=1 is pure data parallelism (TP=1) — the right
+    choice for models whose activation all-reduce cost exceeds their
+    FSDP weight-gather cost (e.g. 1.5B dense at 1M tokens/step, §Perf).
+    """
+    chips_per_pod = 256
+    dp = chips_per_pod // model_parallel
+    shape = (2, dp, model_parallel) if multi_pod else (dp, model_parallel)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes, axis_types=_auto(len(axes)))
+
+
+def make_local_mesh():
+    """A 1×1 mesh over whatever single device is present (tests/examples)."""
+    n = len(jax.devices())
+    return jax.make_mesh((n, 1), ("data", "model"), axis_types=_auto(2))

@@ -1,0 +1,169 @@
+"""Roofline-term extraction from compiled dry-run artifacts.
+
+    compute term    = HLO_FLOPs_per_device / peak_FLOP/s
+    memory term     = HLO_bytes_per_device / HBM_bw
+    collective term = collective_bytes_per_device / (links × link_bw)
+
+``cost_analysis()`` on a GSPMD-partitioned module reports *per-device*
+numbers (verified empirically, see tests/test_dryrun.py), so the chip count
+cancels out of the assignment's formulas. Collective bytes are not in
+cost_analysis: we parse the post-optimization HLO and sum the output-shape
+bytes of every collective op, weighting all-reduce at 2× (reduce-scatter +
+all-gather ring cost) and intra-op all-gather/reduce-scatter at 1×.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+import re
+from typing import Dict
+
+from repro.launch.mesh import HW
+
+__all__ = ["collective_bytes", "RooflineReport", "roofline_from_compiled"]
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "f16": 2, "bf16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s64": 8, "u64": 8, "s32": 4, "u32": 4, "s16": 2, "u16": 2,
+    "s8": 1, "u8": 1, "pred": 1,
+}
+
+_COLL_RE = re.compile(
+    r"^\s*(?:%\S+\s*=\s*)?"
+    r"(\(?[a-z0-9\[\],\s{}:/]*\)?)\s*"
+    r"(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start|-done)?\(",
+    re.MULTILINE,
+)
+_SHAPE_RE = re.compile(r"(f64|f32|f16|bf16|f8e4m3fn|f8e5m2|s64|u64|s32|u32|s16|u16|s8|u8|pred)\[([0-9,]*)\]")
+
+# ring all-reduce ≈ reduce-scatter + all-gather
+_WEIGHT = {"all-reduce": 2.0, "all-gather": 1.0, "reduce-scatter": 1.0,
+           "all-to-all": 1.0, "collective-permute": 1.0}
+
+
+def _shape_bytes(shape_str: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(shape_str):
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                if d:
+                    n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def collective_bytes(hlo_text: str) -> Dict[str, float]:
+    """Weighted bytes moved per device, by collective kind."""
+    out: Dict[str, float] = {}
+    seen_done = set()
+    for m in _COLL_RE.finditer(hlo_text):
+        shape_str, kind = m.group(1), m.group(2)
+        # async pairs appear as -start/-done; count each op once (the -start
+        # carries the shapes; -done repeats them)
+        line = hlo_text[m.start(): hlo_text.find("\n", m.start())]
+        if f"{kind}-done" in line:
+            continue
+        out[kind] = out.get(kind, 0.0) + _WEIGHT[kind] * _shape_bytes(shape_str)
+    return out
+
+
+@dataclasses.dataclass
+class RooflineReport:
+    arch: str
+    shape: str
+    mesh: str
+    chips: int
+    flops_per_device: float
+    bytes_per_device: float
+    coll_bytes_per_device: float
+    coll_breakdown: Dict[str, float]
+    t_compute: float
+    t_memory: float
+    t_collective: float
+    model_flops: float           # 6·N_active·D (global)
+    peak_util_bound: float       # model_flops share of compute-term time
+
+    @property
+    def dominant(self) -> str:
+        terms = {"compute": self.t_compute, "memory": self.t_memory,
+                 "collective": self.t_collective}
+        return max(terms, key=terms.get)
+
+    @property
+    def hlo_per_model_flops(self) -> float:
+        global_hlo = self.flops_per_device * self.chips
+        return global_hlo / self.model_flops if self.model_flops else math.nan
+
+    @property
+    def roofline_fraction(self) -> float:
+        """Fraction of the compute roofline the cell can reach: useful-FLOP
+        time over the max of all three terms."""
+        t_useful = (self.model_flops / self.chips) / HW.PEAK_FLOPS_BF16
+        bound = max(self.t_compute, self.t_memory, self.t_collective)
+        return t_useful / bound if bound else math.nan
+
+    def row(self) -> dict:
+        return {
+            "arch": self.arch, "shape": self.shape, "mesh": self.mesh,
+            "t_compute_s": self.t_compute, "t_memory_s": self.t_memory,
+            "t_collective_s": self.t_collective,
+            "dominant": self.dominant,
+            "model_flops": self.model_flops,
+            "hlo/model": self.hlo_per_model_flops,
+            "roofline_fraction": self.roofline_fraction,
+        }
+
+
+def model_flops_estimate(cfg, case) -> float:
+    """6·N_active·D for training, 2·N_active·D per generated/scored token
+    otherwise (N = active params, D = tokens processed)."""
+    n_active = _active_params(cfg)
+    if case.kind == "train":
+        tokens = case.global_batch * case.seq_len
+        return 6.0 * n_active * tokens
+    if case.kind == "prefill":
+        tokens = case.global_batch * case.seq_len
+        return 2.0 * n_active * tokens
+    tokens = case.global_batch  # one token per sequence
+    return 2.0 * n_active * tokens
+
+
+def _active_params(cfg) -> float:
+    """Parameters touched per token (MoE: top-k experts only; embeddings
+    excluded, LM head included)."""
+    total = cfg.param_count()
+    if cfg.input_mode == "tokens":
+        total -= cfg.vocab_size * cfg.d_model  # embedding lookup isn't a matmul
+    if cfg.is_moe:
+        e_ff = cfg.expert_d_ff
+        nmat = 3 if cfg.gated_mlp else 2
+        per_layer = nmat * cfg.d_model * e_ff
+        n_moe_layers = sum(1 for k in cfg.blocks() if k != "ssm")
+        total -= (cfg.n_experts - cfg.top_k) * per_layer * n_moe_layers
+    return float(total)
+
+
+def roofline_from_compiled(
+    arch_name, shape_name, mesh_name, chips, compiled, cfg, case
+) -> RooflineReport:
+    ca = compiled.cost_analysis()
+    flops = float(ca.get("flops", 0.0))
+    byts = float(ca.get("bytes accessed", 0.0))
+    coll = collective_bytes(compiled.as_text())
+    coll_total = sum(coll.values())
+    mf = model_flops_estimate(cfg, case)
+    t_c = flops / HW.PEAK_FLOPS_BF16
+    t_m = byts / HW.HBM_BW
+    # each v5e chip drives ~4 ICI links; DCN (pod axis) is far slower but
+    # carries only the small "pod"-axis reductions — fold into one term.
+    t_x = coll_total / (4 * HW.ICI_BW)
+    return RooflineReport(
+        arch=arch_name, shape=shape_name, mesh=mesh_name, chips=chips,
+        flops_per_device=flops, bytes_per_device=byts,
+        coll_bytes_per_device=coll_total, coll_breakdown=coll,
+        t_compute=t_c, t_memory=t_m, t_collective=t_x,
+        model_flops=mf,
+        peak_util_bound=(mf / chips / HW.PEAK_FLOPS_BF16),
+    )

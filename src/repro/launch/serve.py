@@ -1,0 +1,46 @@
+"""Serving launcher: loads (or initializes) params and serves batched
+requests through the slot engine.
+
+Usage:
+    PYTHONPATH=src python -m repro.launch.serve --arch gemma3-1b --reduced \
+        --tokens 32
+"""
+import argparse
+
+import jax
+
+from repro.configs import get_config
+from repro.models import init_params
+from repro.serving.engine import Engine, ServeConfig, energy_report
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="gemma3-1b")
+    ap.add_argument("--reduced", action="store_true")
+    ap.add_argument("--cim", default="off")
+    ap.add_argument("--tokens", type=int, default=32)
+    ap.add_argument("--slots", type=int, default=4)
+    ap.add_argument("--ctx", type=int, default=256)
+    args = ap.parse_args()
+
+    arch = get_config(args.arch)
+    if args.reduced:
+        arch = arch.reduced()
+    if args.cim != "off":
+        arch = arch.replace(cim=arch.cim.with_mode(args.cim))
+    params = init_params(jax.random.PRNGKey(0), arch)
+    eng = Engine(arch, params, ServeConfig(batch_slots=args.slots,
+                                           max_ctx=args.ctx))
+    eng.add_request(list(range(1, 9)))
+    eng.add_request(list(range(20, 24)))
+    for i in range(args.tokens):
+        out = eng.step()
+        if i % 8 == 0:
+            print(f"step {i}: {out}")
+    if arch.cim.enabled:
+        print("energy:", energy_report(arch))
+
+
+if __name__ == "__main__":
+    main()

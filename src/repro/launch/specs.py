@@ -1,0 +1,241 @@
+"""Abstract input specs (ShapeDtypeStruct) + shardings for every
+(architecture × input shape) dry-run cell. Nothing here allocates.
+
+Shapes (assignment):
+    train_4k      seq 4096,   global_batch 256   -> train_step
+    prefill_32k   seq 32768,  global_batch 32    -> prefill (forward)
+    decode_32k    seq 32768,  global_batch 128   -> serve_step (1 new token)
+    long_500k     seq 524288, global_batch 1     -> serve_step; only for
+                  sub-quadratic archs (gemma3 / mamba2 / recurrentgemma)
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ArchConfig
+from repro.models import init_cache, init_params
+from repro.parallel.sharding import batch_axes, param_specs
+from repro.training.optimizer import OptimizerConfig, init_opt_state
+
+__all__ = ["SHAPES", "ShapeCase", "cell_is_runnable", "make_cell"]
+
+
+@dataclasses.dataclass(frozen=True)
+class ShapeCase:
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str  # train | prefill | decode
+
+
+SHAPES = {
+    "train_4k": ShapeCase("train_4k", 4096, 256, "train"),
+    "prefill_32k": ShapeCase("prefill_32k", 32768, 32, "prefill"),
+    "decode_32k": ShapeCase("decode_32k", 32768, 128, "decode"),
+    "long_500k": ShapeCase("long_500k", 524288, 1, "decode"),
+}
+
+
+def cell_is_runnable(cfg: ArchConfig, shape: str) -> tuple[bool, str]:
+    if shape == "long_500k" and not cfg.subquadratic:
+        return False, ("skipped: pure full-attention arch at 512k context "
+                       "(see DESIGN.md §5)")
+    return True, ""
+
+
+# ------------------------------------------------------------------ specs
+def _sds(shape, dtype):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def batch_specs(cfg: ArchConfig, case: ShapeCase):
+    b, s = case.global_batch, case.seq_len
+    if cfg.input_mode == "tokens":
+        inputs = _sds((b, s), jnp.int32)
+    else:
+        inputs = _sds((b, s, cfg.d_model), jnp.float32)
+    return {
+        "inputs": inputs,
+        "labels": _sds((b, s), jnp.int32),
+        "mask": _sds((b, s), jnp.float32),
+    }
+
+
+def batch_shardings(cfg: ArchConfig, case: ShapeCase, mesh: Mesh):
+    ba = batch_axes(mesh)
+    bspec = ba if case.global_batch % _size(mesh, ba) == 0 else None
+    spec = {
+        "inputs": (P(bspec, None) if cfg.input_mode == "tokens"
+                   else P(bspec, None, None)),
+        "labels": P(bspec, None),
+        "mask": P(bspec, None),
+    }
+    return jax.tree.map(
+        lambda s: NamedSharding(mesh, s), spec,
+        is_leaf=lambda s: isinstance(s, P))
+
+
+def _size(mesh, ax):
+    if ax is None:
+        return 1
+    import numpy as np
+
+    if isinstance(ax, tuple):
+        return int(np.prod([mesh.shape[a] for a in ax]))
+    return mesh.shape[ax]
+
+
+def cache_spec_tree(cfg: ArchConfig, case: ShapeCase, mesh: Mesh, shapes):
+    """PartitionSpec tree for the decode cache, by leaf path + rank.
+
+    Policy: batch over the data axes when divisible; the *context/seq* dim
+    of full-attention KV over "model" (context-parallel decode); SSM heads
+    and RG-LRU width over "model"; local-window caches batch-only.
+    For batch=1 (long_500k) the seq dim takes both axis groups.
+    """
+    ba = batch_axes(mesh)
+    model_ok = lambda d: d % mesh.shape["model"] == 0
+
+    def spec_for(path: str, shp) -> P:
+        rank = len(shp.shape)
+        stacked = rank >= 1 and "superblocks" in path
+        lead = (None,) if stacked else ()
+        dims = shp.shape[1:] if stacked else shp.shape
+        b = dims[0]
+        bspec = ba if b % _size(mesh, ba) == 0 else None
+        if path.endswith("/k") or path.endswith("/v"):
+            _, s, kv, dh = dims
+            is_global = s == case.seq_len
+            if is_global:
+                if bspec is None:
+                    both = (tuple(ba) if ba else ()) + ("model",)
+                    sspec = both if s % _size(mesh, both) == 0 else (
+                        "model" if model_ok(s) else None)
+                else:
+                    sspec = "model" if model_ok(s) else None
+                return P(*lead, bspec, sspec, None, None)
+            return P(*lead, bspec, None, None, None)
+        if "/conv" in path:
+            c = dims[-1]
+            return P(*lead, bspec, None, "model" if model_ok(c) else None)
+        if path.endswith("/h") and len(dims) == 4:   # ssm state (B,NH,N,P)
+            nh = dims[1]
+            return P(*lead, bspec, "model" if model_ok(nh) else None, None, None)
+        if path.endswith("/h") and len(dims) == 2:   # rglru state (B,W)
+            w = dims[1]
+            return P(*lead, bspec, "model" if model_ok(w) else None)
+        return P()
+
+    flat = jax.tree_util.tree_flatten_with_path(shapes)[0]
+
+    def name(pth):
+        return "/".join(str(getattr(k, "key", k)) for k in pth)
+
+    lookup = {name(pth): spec_for(name(pth), v) for pth, v in flat}
+    return jax.tree_util.tree_map_with_path(
+        lambda pth, v: lookup[name(pth)], shapes)
+
+
+# ------------------------------------------------------------------ cells
+@dataclasses.dataclass
+class Cell:
+    """Everything needed to lower one (arch × shape × mesh) dry-run cell."""
+
+    fn: object            # the function to jit
+    in_specs: tuple       # abstract ShapeDtypeStructs
+    in_shardings: tuple
+    out_shardings: object
+    donate_argnums: tuple = ()
+
+
+def make_cell(cfg: ArchConfig, shape: str, mesh: Mesh,
+              cache_dtype=jnp.bfloat16, microbatches: int = 1,
+              grad_compression: bool = False, algorithm: str = "adamw",
+              layout: str = "fsdp") -> Cell:
+    """Build the jit-able callable + abstract inputs for one cell."""
+    from repro.models import decode_step, forward, train_loss
+    from repro.training.trainer import TrainConfig, make_train_step
+
+    case = SHAPES[shape]
+    ba = batch_axes(mesh)
+
+    if case.kind == "train":
+        params_shape = jax.eval_shape(
+            lambda: init_params(jax.random.PRNGKey(0), cfg))
+        p_specs = param_specs(params_shape, mesh,
+                              use_fsdp=(layout == "fsdp"))
+        ocfg = OptimizerConfig(grad_compression=grad_compression,
+                               algorithm=algorithm)
+        opt_shape = jax.eval_shape(lambda: init_opt_state(params_shape, ocfg))
+        o_specs = param_specs(opt_shape, mesh)  # opt always sharded (ZeRO-1)
+        tcfg = TrainConfig(opt=ocfg, microbatches=microbatches)
+        fn = make_train_step(cfg, tcfg)
+        bspecs = batch_specs(cfg, case)
+        bshard = batch_shardings(cfg, case, mesh)
+        ns = lambda t: jax.tree.map(
+            lambda s: NamedSharding(mesh, s), t,
+            is_leaf=lambda s: isinstance(s, P))
+        return Cell(
+            fn=fn,
+            in_specs=(params_shape, opt_shape, bspecs),
+            in_shardings=(ns(p_specs), ns(o_specs), bshard),
+            out_shardings=(ns(p_specs), ns(o_specs), None),
+            donate_argnums=(0, 1),
+        )
+
+    if case.kind == "prefill":
+        params_shape = jax.eval_shape(
+            lambda: init_params(jax.random.PRNGKey(0), cfg))
+        p_specs = param_specs(params_shape, mesh)
+        bspecs = batch_specs(cfg, case)
+        bshard = batch_shardings(cfg, case, mesh)
+
+        def fn(params, inputs):
+            logits, _, _ = forward(params, inputs, cfg)
+            return logits
+
+        ns = lambda t: jax.tree.map(
+            lambda s: NamedSharding(mesh, s), t,
+            is_leaf=lambda s: isinstance(s, P))
+        return Cell(
+            fn=fn,
+            in_specs=(params_shape, bspecs["inputs"]),
+            in_shardings=(ns(p_specs), bshard["inputs"]),
+            out_shardings=None,
+        )
+
+    # decode
+    b = case.global_batch
+    params_shape = jax.eval_shape(
+        lambda: init_params(jax.random.PRNGKey(0), cfg))
+    p_specs = param_specs(params_shape, mesh)
+    cache_shape = jax.eval_shape(
+        lambda: init_cache(cfg, b, case.seq_len, cache_dtype))
+    c_specs = cache_spec_tree(cfg, case, mesh, cache_shape)
+    if cfg.input_mode == "tokens":
+        tok = _sds((b, 1), jnp.int32)
+    else:
+        tok = _sds((b, 1, cfg.d_model), jnp.float32)
+    idx = _sds((), jnp.int32)
+
+    def fn(params, token, cache, cache_index):
+        return decode_step(params, token, cfg, cache, cache_index)
+
+    ns = lambda t: jax.tree.map(
+        lambda s: NamedSharding(mesh, s), t,
+        is_leaf=lambda s: isinstance(s, P))
+    bspec = ba if b % _size(mesh, ba) == 0 else None
+    tok_spec = P(bspec, None) if cfg.input_mode == "tokens" else P(bspec, None, None)
+    return Cell(
+        fn=fn,
+        in_specs=(params_shape, tok, cache_shape, idx),
+        in_shardings=(ns(p_specs), NamedSharding(mesh, tok_spec),
+                      ns(c_specs), NamedSharding(mesh, P())),
+        out_shardings=(None, ns(c_specs)),
+        donate_argnums=(2,),
+    )

@@ -1,0 +1,82 @@
+"""Aggregate dry-run / roofline JSON cells into the EXPERIMENTS.md tables."""
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+import os
+
+
+def load(out_dir: str, roofline: bool):
+    rows = []
+    for f in sorted(glob.glob(os.path.join(out_dir, "*.json"))):
+        d = json.load(open(f))
+        is_roof = f.endswith("_roofline.json")
+        if is_roof != roofline:
+            continue
+        rows.append(d)
+    return rows
+
+
+def fmt_bytes(b):
+    return f"{b / 2**30:.2f}"
+
+
+def dryrun_table(rows):
+    print("| arch | shape | mesh | status | compile_s | mem/dev GiB | "
+          "flops/dev | coll GiB/dev |")
+    print("|---|---|---|---|---|---|---|---|")
+    for d in rows:
+        if d["status"] != "ok":
+            print(f"| {d['arch']} | {d['shape']} | {d['mesh']} | "
+                  f"{d['status']}: {d.get('reason', d.get('error',''))[:60]} "
+                  f"| | | | |")
+            continue
+        print(
+            f"| {d['arch']} | {d['shape']} | {d['mesh']} | ok "
+            f"| {d['compile_s']} | {fmt_bytes(d['bytes_per_device']['peak_est'])} "
+            f"| {d['cost']['flops_per_device']:.3g} "
+            f"| {d['cost']['collective_bytes_per_device']/2**30:.3f} |")
+
+
+def roofline_table(rows):
+    """Three assignment terms + a fusion-adjusted memory *lower bound*
+    (args+outputs traffic only — perfect fusion), bracketing real TPU HBM
+    time between t_mem_lb and t_mem(HLO upper bound)."""
+    hbm_bw = 819e9
+    print("| arch | shape | t_comp ms | t_mem ms (UB) | t_mem_lb ms "
+          "| t_coll ms | dominant (bracket) | HLO/model | roofline frac |")
+    print("|---|---|---|---|---|---|---|---|---|")
+    for d in rows:
+        if d["status"] != "ok":
+            continue
+        r = d["roofline"]
+        b = d["bytes_per_device"]
+        t_lb = (b["arguments"] + b["outputs"]) / hbm_bw
+        terms = {"compute": r["t_compute_s"], "memory_lb": t_lb,
+                 "collective": r["t_collective_s"]}
+        dom_lb = max(terms, key=terms.get)
+        dom = r["dominant"] if r["dominant"] == dom_lb.replace("_lb", "") \
+            else f"{r['dominant']}→{dom_lb}"
+        print(
+            f"| {d['arch']} | {d['shape']} "
+            f"| {r['t_compute_s']*1e3:.2f} | {r['t_memory_s']*1e3:.2f} "
+            f"| {t_lb*1e3:.2f} "
+            f"| {r['t_collective_s']*1e3:.2f} | {dom} "
+            f"| {r['hlo/model']:.2f} | {r['roofline_fraction']:.3f} |")
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--dir", default="experiments/dryrun")
+    ap.add_argument("--roofline", action="store_true")
+    args = ap.parse_args()
+    rows = load(args.dir, args.roofline)
+    if args.roofline:
+        roofline_table(rows)
+    else:
+        dryrun_table(rows)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,9 @@
+from repro.models.transformer import (
+    decode_step,
+    forward,
+    init_cache,
+    init_params,
+    train_loss,
+)
+
+__all__ = ["init_params", "init_cache", "forward", "train_loss", "decode_step"]

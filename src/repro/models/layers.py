@@ -1,0 +1,262 @@
+"""Shared transformer layers: norms, rotary embeddings, GQA attention
+(full + sliding window, train and cached-decode paths), and MLPs.
+
+All projection matmuls route through ``repro.kernels.ops.cim_matmul`` so the
+paper's GR-CIM numerics can be switched on per-config (CIMConfig.apply_to).
+Functional style: ``init_*`` builds param pytrees, ``apply_*`` consumes them.
+Compute dtype follows the inputs; softmax/normalization accumulate in f32.
+"""
+from __future__ import annotations
+
+import math
+
+import numpy as np
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.core.cim_config import CIMConfig
+from repro.kernels.ops import cim_matmul
+from repro.parallel.sharding import shard
+
+__all__ = [
+    "init_dense",
+    "dense",
+    "init_rmsnorm",
+    "rmsnorm",
+    "rope",
+    "init_attention",
+    "attention",
+    "init_mlp",
+    "mlp",
+]
+
+_NEG_INF = -1e30
+
+
+# ------------------------------------------------------------------ basics
+def init_dense(key, d_in: int, d_out: int, dtype, scale: Optional[float] = None,
+               bias: bool = False):
+    scale = scale if scale is not None else 1.0 / math.sqrt(d_in)
+    p = {"w": (scale * jax.random.normal(key, (d_in, d_out))).astype(dtype)}
+    if bias:
+        p["b"] = jnp.zeros((d_out,), dtype)
+    return p
+
+
+def dense(p, x, cim: Optional[CIMConfig] = None, site: str = "ffn"):
+    """x @ W (+ b), optionally through the CIM simulation for this site."""
+    cfg = cim if (cim is not None and cim.enabled and site in cim.apply_to) else None
+    y = cim_matmul(x, p["w"].astype(x.dtype), cfg)
+    if "b" in p:
+        y = y + p["b"].astype(x.dtype)
+    return y
+
+
+def init_rmsnorm(d: int, dtype):
+    return {"g": jnp.ones((d,), dtype)}
+
+
+def rmsnorm(p, x, eps: float = 1e-6):
+    x32 = x.astype(jnp.float32)
+    rms = jnp.sqrt(jnp.mean(jnp.square(x32), axis=-1, keepdims=True) + eps)
+    return ((x32 / rms) * p["g"].astype(jnp.float32)).astype(x.dtype)
+
+
+def rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """Rotary position embedding. x: (B, S, H, Dh); positions: (B, S)."""
+    dh = x.shape[-1]
+    half = dh // 2
+    freqs = jnp.exp(
+        -math.log(theta) * jnp.arange(0, half, dtype=jnp.float32) / half
+    )  # (half,)
+    ang = positions[..., None].astype(jnp.float32) * freqs  # (B, S, half)
+    cos = jnp.cos(ang)[:, :, None, :]
+    sin = jnp.sin(ang)[:, :, None, :]
+    x1, x2 = x[..., :half], x[..., half:]
+    out = jnp.concatenate(
+        [x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1
+    )
+    return out.astype(x.dtype)
+
+
+# ------------------------------------------------------------------ attention
+def _attend_chunked(q, kk, vv, pos_q, pos_k, cfg: ArchConfig, local: bool):
+    """Query-chunked masked attention against full keys.
+
+    q: (B, Sq, H, Dh); kk/vv: (B, Sk, KV, Dh); positions give causality.
+    Bounds score materialization to (B, H, ck, Sk) per chunk.
+    """
+    b, sq, h, dh = q.shape
+    kv = kk.shape[2]
+    groups = h // kv
+
+    def attend(q_c, pos_c):
+        c = q_c.shape[1]
+        qg = q_c.reshape(b, c, kv, groups, dh)
+        scores = jnp.einsum("bskgd,btkd->bkgst", qg, kk,
+                            preferred_element_type=jnp.float32)
+        scores = scores / math.sqrt(dh)
+        mask = _attn_mask(pos_c, pos_k, cfg.window, local)      # (B, C, Sk)
+        scores = jnp.where(mask[:, None, None, :, :], scores, _NEG_INF)
+        probs = jax.nn.softmax(scores, axis=-1).astype(q.dtype)
+        o = jnp.einsum("bkgst,btkd->bskgd", probs, vv)
+        return o.reshape(b, c, h, dh)
+
+    ck = cfg.attn_chunk or sq
+    while sq % ck:
+        ck //= 2
+    if ck >= sq:
+        return attend(q, pos_q)
+    outs = [attend(q[:, i * ck:(i + 1) * ck], pos_q[:, i * ck:(i + 1) * ck])
+            for i in range(sq // ck)]
+    return jnp.concatenate(outs, axis=1)
+
+
+def _train_attention(q, k, v, positions, cfg: ArchConfig, local: bool):
+    """Full-sequence attention with explicit sequence parallelism.
+
+    When a mesh is active (and shapes divide), runs under shard_map with
+    queries sharded over "model" (each query block is independent given all
+    keys) and K/V replicated across "model" — no GSPMD guessing, no
+    involuntary remat in the backward. K/V gradients psum over "model"
+    automatically. Falls back to single-device chunked attention otherwise.
+    """
+    from jax.sharding import PartitionSpec as P
+    from repro.parallel.sharding import batch_axes, get_mesh
+
+    b, s, h, dh = q.shape
+    mesh = get_mesh()
+    if mesh is not None:
+        ba = batch_axes(mesh)
+        nb = int(np.prod([mesh.shape[a] for a in ba])) if ba else 1
+        nm = mesh.shape["model"]
+        if b % nb == 0 and s % nm == 0 and (s // nm) >= 1:
+            qspec = P(ba, "model", None, None)
+            kvspec = P(ba, None, None, None)
+            pq = P(ba, "model")
+            pk = P(ba, None)
+
+            def local_fn(q_l, k_l, v_l, posq_l, posk_l):
+                return _attend_chunked(q_l, k_l, v_l, posq_l, posk_l,
+                                       cfg, local)
+
+            return jax.shard_map(
+                local_fn, mesh=mesh,
+                in_specs=(qspec, kvspec, kvspec, pq, pk),
+                out_specs=qspec,
+            )(q, k, v, positions, positions)
+    return _attend_chunked(q, k, v, positions, positions, cfg, local)
+
+
+def init_attention(key, cfg: ArchConfig, dtype):
+    d, h, kv, dh = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.d_head
+    ks = jax.random.split(key, 4)
+    return {
+        "wq": init_dense(ks[0], d, h * dh, dtype, bias=cfg.qkv_bias),
+        "wk": init_dense(ks[1], d, kv * dh, dtype, bias=cfg.qkv_bias),
+        "wv": init_dense(ks[2], d, kv * dh, dtype, bias=cfg.qkv_bias),
+        "wo": init_dense(ks[3], h * dh, d, dtype,
+                         scale=1.0 / math.sqrt(h * dh * 2 * cfg.n_layers)),
+    }
+
+
+def _attn_mask(q_pos, k_pos, window: int, local: bool):
+    """(.., S_q, S_k) boolean mask: causal, optionally banded."""
+    causal = q_pos[..., :, None] >= k_pos[..., None, :]
+    if local:
+        causal &= q_pos[..., :, None] - k_pos[..., None, :] < window
+    return causal
+
+
+def attention(
+    p,
+    x: jax.Array,
+    cfg: ArchConfig,
+    *,
+    local: bool,
+    positions: jax.Array,
+    cache: Optional[dict] = None,
+    cache_index: Optional[jax.Array] = None,
+):
+    """GQA attention.
+
+    Train path: ``cache is None`` — full (B, S, S) masked attention.
+    Decode path: ``cache`` = {"k","v"): (B, S_ctx, KV, Dh)} ring/linear
+    buffer; ``cache_index`` (scalar) is the write position. Returns
+    (out, new_cache).
+    """
+    b, s, d = x.shape
+    h, kv, dh = cfg.n_heads, cfg.n_kv_heads, cfg.d_head
+    groups = h // kv
+    cim = cfg.cim
+
+    q = dense(p["wq"], x, cim, "qkvo").reshape(b, s, h, dh)
+    k = dense(p["wk"], x, cim, "qkvo").reshape(b, s, kv, dh)
+    v = dense(p["wv"], x, cim, "qkvo").reshape(b, s, kv, dh)
+    q = rope(q, positions, cfg.rope_theta)
+    k = rope(k, positions, cfg.rope_theta)
+
+    if cache is None:
+        out = _train_attention(q, k, v, positions, cfg, local)
+        new_cache = None
+    else:
+        # single-token decode: s == 1, write into the cache then attend.
+        # ``cache_index`` may be a scalar or a per-sequence (B,) vector
+        # (continuous batching: slots at different generation lengths).
+        assert s == 1
+        s_ctx = cache["k"].shape[1]
+        idx = jnp.broadcast_to(jnp.asarray(cache_index), (b,))     # (B,)
+        if local:
+            write_at = jnp.mod(idx, s_ctx)  # ring buffer
+        else:
+            write_at = idx
+        upd = jax.vmap(
+            lambda c, u, i: jax.lax.dynamic_update_slice(c, u, (i, 0, 0)))
+        kk = upd(cache["k"], k.astype(cache["k"].dtype), write_at)
+        vv = upd(cache["v"], v.astype(cache["v"].dtype), write_at)
+        new_cache = {"k": kk, "v": vv}
+        qg = q.reshape(b, 1, kv, groups, dh)
+        scores = jnp.einsum("bskgd,btkd->bkgst", qg, kk.astype(x.dtype),
+                            preferred_element_type=jnp.float32)
+        scores = scores / math.sqrt(dh)
+        # positions of cache slots, per sequence
+        slot = jnp.arange(s_ctx)[None, :]                           # (1,S)
+        if local:
+            age = jnp.mod(write_at[:, None] - slot, s_ctx)
+            k_pos = idx[:, None] - age
+            valid = (k_pos >= 0) & (k_pos >= (idx - cfg.window + 1)[:, None])
+        else:
+            valid = slot <= idx[:, None]                            # (B,S)
+        scores = jnp.where(valid[:, None, None, None, :], scores, _NEG_INF)
+        probs = jax.nn.softmax(scores, axis=-1).astype(x.dtype)
+        out = jnp.einsum("bkgst,btkd->bskgd", probs, vv.astype(x.dtype))
+
+    out = out.reshape(b, s, h * dh)
+    return dense(p["wo"], out, cim, "qkvo"), new_cache
+
+
+# ------------------------------------------------------------------ MLP
+def init_mlp(key, d: int, f: int, cfg: ArchConfig, dtype):
+    ks = jax.random.split(key, 3)
+    p = {
+        "wi": init_dense(ks[0], d, f, dtype),
+        "wo": init_dense(ks[1], f, d, dtype,
+                         scale=1.0 / math.sqrt(f * 2 * cfg.n_layers)),
+    }
+    if cfg.gated_mlp:
+        p["wg"] = init_dense(ks[2], d, f, dtype)
+    return p
+
+
+def mlp(p, x, cfg: ArchConfig):
+    cim = cfg.cim
+    hidden = dense(p["wi"], x, cim, "ffn")
+    if cfg.gated_mlp:
+        hidden = jax.nn.silu(dense(p["wg"], x, cim, "ffn")) * hidden
+    else:
+        hidden = jax.nn.gelu(hidden)
+    hidden = shard(hidden, "data", None, "model")
+    return dense(p["wo"], hidden, cim, "ffn")

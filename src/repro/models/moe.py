@@ -1,0 +1,152 @@
+"""Mixture-of-Experts FFN: top-k token-choice routing, fixed expert
+capacity, expert-parallel execution.
+
+Dispatch/combine use *grouped* routing (GShard-style): tokens are grouped
+by data shard and each group scatters into its own capacity slice, so under
+shard_map every scatter/gather is device-local — GSPMD cannot partition a
+scatter with computed indices and otherwise falls back to full replication
+(a 60 GiB/device buffer for grok-314B at 1M tokens; see DESIGN.md).  The
+global buffer layout is (E, G·C_g, D) with the capacity dim sharded over the
+data axes; expert weights are EP-sharded over "model" when E divides it and
+intra-expert TP-sharded otherwise, and the expert einsums stay in GSPMD.
+
+Arctic-style ``moe_dense_residual`` runs a dense MLP in parallel and sums.
+Aux load-balancing loss follows Switch/Shazeer: E·Σ_e f_e·p_e.
+"""
+from __future__ import annotations
+
+import math
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import ArchConfig
+from repro.models.layers import dense, init_dense, init_mlp, mlp
+from repro.parallel.sharding import axis_divides, batch_axes, get_mesh, shard
+
+__all__ = ["init_moe", "moe"]
+
+
+def init_moe(key, cfg: ArchConfig, dtype):
+    d, f, e = cfg.d_model, cfg.expert_d_ff, cfg.n_experts
+    ks = jax.random.split(key, 5)
+    scale_in = 1.0 / math.sqrt(d)
+    scale_out = 1.0 / math.sqrt(f * 2 * cfg.n_layers)
+    p = {
+        "router": init_dense(ks[0], d, e, dtype=jnp.float32),
+        "experts": {
+            "wi": (scale_in * jax.random.normal(ks[1], (e, d, f))).astype(dtype),
+            "wo": (scale_out * jax.random.normal(ks[2], (e, f, d))).astype(dtype),
+        },
+    }
+    if cfg.gated_mlp:
+        p["experts"]["wg"] = (
+            scale_in * jax.random.normal(ks[3], (e, d, f))
+        ).astype(dtype)
+    if cfg.moe_dense_residual:
+        p["dense_mlp"] = init_mlp(ks[4], d, cfg.d_ff, cfg, dtype)
+    return p
+
+
+def _dispatch_local(xf, expert_idx, e: int, cap: int):
+    """Group-local dispatch: (T, D), (T, k) -> buf (E, cap, D), slot, keep."""
+    t, d = xf.shape
+    k = expert_idx.shape[-1]
+    flat_expert = expert_idx.reshape(-1)                          # (T*k,)
+    eq = jax.nn.one_hot(flat_expert, e, dtype=jnp.int32)          # (T*k, E)
+    pos_in_e = (jnp.cumsum(eq, axis=0) - eq) * eq
+    position = jnp.sum(pos_in_e, axis=-1)                         # (T*k,)
+    keep = position < cap
+    slot = flat_expert * cap + jnp.minimum(position, cap - 1)
+    src = jnp.repeat(xf, k, axis=0)
+    buf = jnp.zeros((e * cap, d), xf.dtype).at[slot].add(
+        jnp.where(keep[:, None], src, 0.0))
+    return buf.reshape(e, cap, d), slot, keep
+
+
+def _combine_local(out_buf, slot, keep, gates, k: int):
+    """Group-local combine: buf (E, cap, D) -> tokens (T, D)."""
+    e, cap, d = out_buf.shape
+    flat = out_buf.reshape(e * cap, d)
+    gathered = jnp.where(keep[:, None], flat[slot], 0.0)          # (T*k, D)
+    weighted = gathered * gates.reshape(-1, 1).astype(out_buf.dtype)
+    t = slot.shape[0] // k
+    return jnp.sum(weighted.reshape(t, k, d), axis=1)
+
+
+def moe(p, x: jax.Array, cfg: ArchConfig) -> Tuple[jax.Array, jax.Array]:
+    """Returns (output (B,S,D), aux load-balance loss scalar)."""
+    b, s, d = x.shape
+    e, k = cfg.n_experts, cfg.top_k
+    t = b * s
+    xf = x.reshape(t, d)
+
+    # --- routing (always f32 for numerics) ---
+    logits = dense(p["router"], xf.astype(jnp.float32), cfg.cim, "expert")
+    probs = jax.nn.softmax(logits, axis=-1)                       # (T, E)
+    gate_vals, expert_idx = jax.lax.top_k(probs, k)               # (T, k)
+    gate_vals = gate_vals / jnp.maximum(
+        jnp.sum(gate_vals, axis=-1, keepdims=True), 1e-9)
+
+    # aux loss: fraction of tokens per expert × mean router prob per expert
+    one_hot_top1 = jax.nn.one_hot(expert_idx[:, 0], e)
+    f_e = jnp.mean(one_hot_top1, axis=0)
+    p_e = jnp.mean(probs, axis=0)
+    aux = e * jnp.sum(f_e * p_e)
+
+    mesh = get_mesh()
+    ba = batch_axes(mesh) if mesh is not None else None
+    nb = int(np.prod([mesh.shape[a] for a in ba])) if ba else 1
+    grouped = mesh is not None and t % nb == 0 and (t // nb) >= 1
+
+    if grouped:
+        cap = max(4, int(math.ceil(t / nb * k / e * cfg.capacity_factor)))
+        disp = jax.shard_map(
+            lambda xf_l, ei_l: _dispatch_local(xf_l, ei_l, e, cap),
+            mesh=mesh,
+            in_specs=(P(ba, None), P(ba, None)),
+            out_specs=(P(None, ba, None), P(ba), P(ba)),
+        )
+        buf, slot, keep = disp(xf, expert_idx)
+    else:
+        cap = max(4, int(math.ceil(t * k / e * cfg.capacity_factor)))
+        buf, slot, keep = _dispatch_local(xf, expert_idx, e, cap)
+
+    # EP over "model" when E divides it; otherwise intra-expert TP with the
+    # hidden dim over "model" (grok: 8 experts @ 16-way TP).
+    ep = axis_divides(e, "model")
+    buf = shard(buf, "model" if ep else None, "data", None)
+
+    # --- expert computation: (E, C, D) @ (E, D, F) --- (GSPMD)
+    wi = p["experts"]["wi"].astype(x.dtype)
+    wo = p["experts"]["wo"].astype(x.dtype)
+    h = jnp.einsum("ecd,edf->ecf", buf, wi)
+    if cfg.gated_mlp:
+        wg = p["experts"]["wg"].astype(x.dtype)
+        h = jax.nn.silu(jnp.einsum("ecd,edf->ecf", buf, wg)) * h
+    else:
+        h = jax.nn.gelu(h)
+    h = shard(h, "model", "data", None) if ep else shard(
+        h, None, "data", "model")
+    out_buf = jnp.einsum("ecf,efd->ecd", h, wo)
+    out_buf = shard(out_buf, "model" if ep else None, "data", None)
+
+    # --- combine ---
+    if grouped:
+        comb = jax.shard_map(
+            lambda ob_l, sl_l, kp_l, g_l: _combine_local(ob_l, sl_l, kp_l, g_l, k),
+            mesh=mesh,
+            in_specs=(P(None, ba, None), P(ba), P(ba), P(ba, None)),
+            out_specs=P(ba, None),
+        )
+        out = comb(out_buf, slot, keep, gate_vals)
+    else:
+        out = _combine_local(out_buf, slot, keep, gate_vals, k)
+    out = out.reshape(b, s, d)
+
+    if cfg.moe_dense_residual:
+        out = out + mlp(p["dense_mlp"], x, cfg)
+    return out, aux

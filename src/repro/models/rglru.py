@@ -1,0 +1,96 @@
+"""RG-LRU recurrent block (RecurrentGemma / Griffin, arXiv:2402.19427).
+
+    r_t = sigmoid(W_r u_t),  i_t = sigmoid(W_i u_t)
+    a_t = exp(-c · softplus(Λ) · r_t)            (per-channel gated decay)
+    h_t = a_t ⊙ h_{t-1} + sqrt(1 - a_t²) ⊙ (i_t ⊙ x_t)
+    out = W_o h_t
+
+preceded by a width-``conv_width`` causal depthwise conv on the x branch.
+Train path uses an associative scan over time; decode is the recurrence.
+"""
+from __future__ import annotations
+
+import math
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models.layers import dense, init_dense
+from repro.models.ssm import _causal_conv
+from repro.parallel.sharding import shard
+
+__all__ = ["init_rglru", "rglru_train", "rglru_decode", "init_rglru_state"]
+
+_C = 8.0
+
+
+def init_rglru(key, cfg: ArchConfig, dtype):
+    d, w = cfg.d_model, cfg.rnn_width
+    ks = jax.random.split(key, 5)
+    return {
+        "in_proj": init_dense(ks[0], d, w, dtype),
+        "gate_r": init_dense(ks[1], d, w, dtype),
+        "gate_i": init_dense(ks[2], d, w, dtype),
+        "conv": (0.1 * jax.random.normal(ks[3], (cfg.conv_width, w))).astype(dtype),
+        # Λ init so that a^c spans (0.9, 0.999) at r=1 (paper's stable range)
+        "lam": jnp.log(jnp.expm1(
+            -jnp.log(jnp.linspace(0.9, 0.999, w)) / _C
+        )).astype(jnp.float32),
+        "out_proj": init_dense(ks[4], w, d, dtype,
+                               scale=1.0 / math.sqrt(w * 2 * cfg.n_layers)),
+    }
+
+
+def init_rglru_state(cfg: ArchConfig, batch: int, dtype=jnp.float32):
+    return {
+        "h": jnp.zeros((batch, cfg.rnn_width), dtype),
+        "conv": jnp.zeros((batch, cfg.conv_width - 1, cfg.rnn_width), dtype),
+    }
+
+
+def _branches(p, u, cfg: ArchConfig):
+    x = dense(p["in_proj"], u, cfg.cim, "qkvo")
+    r = jax.nn.sigmoid(dense(p["gate_r"], u, cfg.cim, "qkvo").astype(jnp.float32))
+    i = jax.nn.sigmoid(dense(p["gate_i"], u, cfg.cim, "qkvo").astype(jnp.float32))
+    log_a = -_C * jax.nn.softplus(p["lam"])[None, None, :] * r   # (B,S,W) ≤ 0
+    return x, i, log_a
+
+
+def rglru_train(p, u: jax.Array, cfg: ArchConfig) -> jax.Array:
+    b, s, d = u.shape
+    x, i, log_a = _branches(p, u, cfg)
+    x = _causal_conv(x, p["conv"].astype(x.dtype))
+    a = jnp.exp(log_a)
+    gated = jnp.sqrt(jnp.maximum(1.0 - a * a, 1e-9)) * (
+        i * x.astype(jnp.float32)
+    )
+
+    def combine(c1, c2):
+        a1, b1 = c1
+        a2, b2 = c2
+        return a1 * a2, a2 * b1 + b2
+
+    aa, h = jax.lax.associative_scan(combine, (a, gated), axis=1)
+    h = shard(h.astype(u.dtype), "data", None, "model")
+    return dense(p["out_proj"], h, cfg.cim, "qkvo")
+
+
+def rglru_decode(
+    p, u: jax.Array, cfg: ArchConfig, state: dict
+) -> Tuple[jax.Array, dict]:
+    b, s, d = u.shape
+    assert s == 1
+    x, i, log_a = _branches(p, u, cfg)
+    win = jnp.concatenate([state["conv"], x.astype(state["conv"].dtype)], axis=1)
+    kernel = p["conv"].astype(jnp.float32)
+    xc = jnp.sum(win * kernel[None, :, :], axis=1)               # (B, W)
+    new_conv = win[:, 1:, :]
+    a = jnp.exp(log_a[:, 0, :])
+    h_new = a * state["h"] + jnp.sqrt(jnp.maximum(1.0 - a * a, 1e-9)) * (
+        i[:, 0, :] * xc
+    )
+    out = dense(p["out_proj"], h_new[:, None, :].astype(u.dtype),
+                cfg.cim, "qkvo")
+    return out, {"h": h_new, "conv": new_conv}

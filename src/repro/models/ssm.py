@@ -1,0 +1,178 @@
+"""Mamba2 SSD (state-space duality) block — chunked parallel algorithm.
+
+Per head h with scalar decay a_t = exp(-dt_t · A_h):
+
+    H_t = a_t · H_{t-1} + dt_t · B_t ⊗ x_t          (N × P state)
+    y_t = C_tᵀ H_t + D_h · x_t
+
+The chunked algorithm (arXiv:2405.21060 §6) materializes only S/chunk
+states: within a chunk the dual quadratic (attention-like) form computes
+the intra-chunk contribution; a scan over chunk summaries carries state.
+Train path is fully parallel; decode path is the O(1) recurrence.
+"""
+from __future__ import annotations
+
+import math
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models.layers import dense, init_dense, init_rmsnorm, rmsnorm
+from repro.parallel.sharding import shard
+
+__all__ = ["init_ssm", "ssm_train", "ssm_decode", "init_ssm_state"]
+
+
+def init_ssm(key, cfg: ArchConfig, dtype):
+    d, di, n, nh = cfg.d_model, cfg.d_inner, cfg.ssm_state, cfg.ssm_heads
+    ks = jax.random.split(key, 6)
+    return {
+        # projections: x -> [z (gate), x_in], plus B, C, dt heads
+        "in_proj": init_dense(ks[0], d, 2 * di, dtype),
+        "bc_proj": init_dense(ks[1], d, 2 * n, dtype),
+        "dt_proj": init_dense(ks[2], d, nh, dtype),
+        "conv": (0.1 * jax.random.normal(ks[3], (cfg.conv_width, di))).astype(dtype),
+        "A_log": jnp.log(
+            jnp.linspace(1.0, 16.0, nh, dtype=jnp.float32)
+        ),  # per-head decay rate
+        "D": jnp.ones((nh,), jnp.float32),
+        "dt_bias": jnp.zeros((nh,), jnp.float32),
+        "out_norm": init_rmsnorm(di, dtype),
+        "out_proj": init_dense(ks[4], di, d, dtype,
+                               scale=1.0 / math.sqrt(di * 2 * cfg.n_layers)),
+    }
+
+
+def init_ssm_state(cfg: ArchConfig, batch: int, dtype=jnp.float32):
+    return {
+        "h": jnp.zeros((batch, cfg.ssm_heads, cfg.ssm_state, cfg.ssm_headdim), dtype),
+        "conv": jnp.zeros((batch, cfg.conv_width - 1, cfg.d_inner), dtype),
+    }
+
+
+def _causal_conv(x: jax.Array, kernel: jax.Array) -> jax.Array:
+    """Depthwise causal conv along time. x: (B,S,C); kernel: (W,C)."""
+    w = kernel.shape[0]
+    xp = jnp.pad(x, ((0, 0), (w - 1, 0), (0, 0)))
+    out = jnp.zeros_like(x)
+    for i in range(w):
+        out = out + xp[:, i : i + x.shape[1], :] * kernel[i][None, None, :]
+    return out
+
+
+def _project(p, u, cfg: ArchConfig):
+    """Shared projection head. u: (B,S,D) -> z, x, B, C, dt."""
+    di, n, nh, hd = cfg.d_inner, cfg.ssm_state, cfg.ssm_heads, cfg.ssm_headdim
+    zx = dense(p["in_proj"], u, cfg.cim, "qkvo")
+    z, x = jnp.split(zx, [di], axis=-1)
+    bc = dense(p["bc_proj"], u, cfg.cim, "qkvo").astype(jnp.float32)
+    bmat, cmat = jnp.split(bc, [n], axis=-1)                     # (B,S,N) each
+    dt = dense(p["dt_proj"], u, cfg.cim, "qkvo").astype(jnp.float32)
+    dt = jax.nn.softplus(dt + p["dt_bias"][None, None, :])       # (B,S,NH)
+    return z, x, bmat, cmat, dt
+
+
+def ssm_train(p, u: jax.Array, cfg: ArchConfig) -> jax.Array:
+    """Full-sequence SSD. u: (B,S,D) -> (B,S,D)."""
+    b, s, d = u.shape
+    di, n, nh, hd, ck = (cfg.d_inner, cfg.ssm_state, cfg.ssm_heads,
+                         cfg.ssm_headdim, cfg.ssm_chunk)
+    assert s % ck == 0, f"seq {s} must be a multiple of ssm_chunk {ck}"
+    nc = s // ck
+
+    z, x, bmat, cmat, dt = _project(p, u, cfg)
+    x = _causal_conv(x, p["conv"].astype(x.dtype))
+    x = jax.nn.silu(x)
+    xh = x.reshape(b, s, nh, hd).astype(jnp.float32)             # heads
+    # SSD is embarrassingly parallel over heads: shard NH over "model"
+    # (batch over data). Without this the (B,NC,CK,CK,NH) decay tensor is
+    # replicated across the TP axis — §Perf iteration M1.
+    xh = shard(xh, "data", None, "model", None)
+    dt = shard(dt, "data", None, "model")
+    a_rate = jnp.exp(p["A_log"])[None, None, :]                  # (1,1,NH)
+    log_a = -dt * a_rate                                         # (B,S,NH) ≤ 0
+
+    # --- reshape into chunks ---
+    xc = xh.reshape(b, nc, ck, nh, hd)
+    bc_ = bmat.reshape(b, nc, ck, n)
+    cc_ = cmat.reshape(b, nc, ck, n)
+    dtc = dt.reshape(b, nc, ck, nh)
+    lac = log_a.reshape(b, nc, ck, nh)
+    cum = jnp.cumsum(lac, axis=2)                                # (B,NC,CK,NH)
+
+    # --- intra-chunk (dual quadratic form) ---
+    # decay(i<-j) = exp(cum_i - cum_j), causal i >= j
+    diff = cum[:, :, :, None, :] - cum[:, :, None, :, :]         # (B,NC,i,j,NH)
+    ii = jnp.arange(ck)
+    causal = (ii[:, None] >= ii[None, :])[None, None, :, :, None]
+    # mask BEFORE exp: the non-causal side has diff > 0 and exp overflows,
+    # poisoning gradients through jnp.where.
+    decay = jnp.exp(jnp.where(causal, diff, -jnp.inf))
+    decay = shard(decay, "data", None, None, None, "model")
+    cb = jnp.einsum("bgin,bgjn->bgij", cc_, bc_)                 # (B,NC,i,j)
+    att = cb[..., None] * decay * dtc[:, :, None, :, :]          # (B,NC,i,j,NH)
+    y_intra = jnp.einsum("bgijh,bgjhp->bgihp", att, xc)
+
+    # --- chunk summaries and inter-chunk scan ---
+    # state contribution of chunk g: Σ_j exp(cum_last - cum_j)·dt_j·B_j⊗x_j
+    tail = jnp.exp(cum[:, :, -1:, :] - cum) * dtc                # (B,NC,CK,NH)
+    chunk_state = jnp.einsum("bgjh,bgjn,bgjhp->bghnp", tail, bc_, xc)
+    chunk_decay = jnp.exp(cum[:, :, -1, :])                      # (B,NC,NH)
+
+    def scan_fn(h_prev, inp):
+        cs, cd = inp                                             # state, decay
+        h_new = cd[..., None, None] * h_prev + cs
+        return h_new, h_prev                                     # emit state *before* chunk
+
+    h0 = jnp.zeros((b, nh, n, hd), jnp.float32)
+    _, h_before = jax.lax.scan(
+        scan_fn,
+        h0,
+        (jnp.moveaxis(chunk_state, 1, 0), jnp.moveaxis(chunk_decay, 1, 0)),
+    )
+    h_before = jnp.moveaxis(h_before, 0, 1)                      # (B,NC,NH,N,P)
+    h_before = shard(h_before, "data", None, "model", None, None)
+
+    # --- inter-chunk output: y_j += C_j · exp(cum_j) · H_before ---
+    inter_w = jnp.exp(cum)                                       # (B,NC,CK,NH)
+    y_inter = jnp.einsum(
+        "bgin,bgih,bghnp->bgihp", cc_, inter_w, h_before
+    )
+
+    y = (y_intra + y_inter).reshape(b, s, nh, hd)
+    y = y + p["D"][None, None, :, None] * xh
+    y = y.reshape(b, s, di).astype(u.dtype)
+    y = rmsnorm(p["out_norm"], y * jax.nn.silu(z))
+    y = shard(y, "data", None, "model")
+    return dense(p["out_proj"], y, cfg.cim, "qkvo")
+
+
+def ssm_decode(
+    p, u: jax.Array, cfg: ArchConfig, state: dict
+) -> Tuple[jax.Array, dict]:
+    """One-token recurrence. u: (B,1,D); state: {"h","conv"}."""
+    b, s, d = u.shape
+    assert s == 1
+    di, n, nh, hd = cfg.d_inner, cfg.ssm_state, cfg.ssm_heads, cfg.ssm_headdim
+
+    z, x, bmat, cmat, dt = _project(p, u, cfg)
+    # causal conv over the rolling window
+    win = jnp.concatenate([state["conv"], x.astype(state["conv"].dtype)], axis=1)
+    kernel = p["conv"].astype(jnp.float32)
+    xc = jnp.sum(win * kernel[None, :, :], axis=1, keepdims=True)
+    new_conv = win[:, 1:, :]
+    xs = jax.nn.silu(xc)
+    xh = xs.reshape(b, nh, hd).astype(jnp.float32)
+
+    a_rate = jnp.exp(p["A_log"])[None, :]
+    a = jnp.exp(-dt[:, 0, :] * a_rate)                           # (B,NH)
+    dbx = jnp.einsum("bh,bn,bhp->bhnp", dt[:, 0, :], bmat[:, 0, :], xh)
+    h_new = a[..., None, None] * state["h"] + dbx
+    y = jnp.einsum("bn,bhnp->bhp", cmat[:, 0, :], h_new)
+    y = y + p["D"][None, :, None] * xh
+    y = y.reshape(b, 1, di).astype(u.dtype)
+    y = rmsnorm(p["out_norm"], y * jax.nn.silu(z))
+    out = dense(p["out_proj"], y, cfg.cim, "qkvo")
+    return out, {"h": h_new, "conv": new_conv}

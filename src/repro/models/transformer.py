@@ -1,0 +1,338 @@
+"""Model assembly: embeddings + a stack of blocks (attn/local/rglru/ssm with
+dense-or-MoE FFNs) + LM head, for all ten assigned architectures.
+
+Depth is organized as *super-blocks* of ``len(cfg.block_pattern)`` layers.
+Full super-blocks are scanned (``jax.lax.scan`` over stacked params) so the
+lowered HLO is O(pattern period), not O(depth) — essential for compiling
+512-way-sharded 35..64-layer models; remainder layers run unrolled.
+
+Two execution paths share the layer code:
+  train/prefill  full-sequence, no caches
+  decode         single token against per-layer caches/states
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models import layers as L
+from repro.models.moe import init_moe, moe
+from repro.models.rglru import init_rglru, init_rglru_state, rglru_decode, rglru_train
+from repro.models.ssm import init_ssm, init_ssm_state, ssm_decode, ssm_train
+from repro.parallel.sharding import shard
+
+__all__ = [
+    "init_params",
+    "init_cache",
+    "forward",
+    "train_loss",
+    "decode_step",
+]
+
+
+def _dtype(cfg: ArchConfig):
+    return jnp.dtype(cfg.dtype)
+
+
+def _ckpt(fn, cfg: ArchConfig, static_argnums=()):
+    if cfg.remat_policy == "dots":
+        return jax.checkpoint(
+            fn, static_argnums=static_argnums,
+            policy=jax.checkpoint_policies.dots_with_no_batch_dims_saveable)
+    return jax.checkpoint(fn, static_argnums=static_argnums)
+
+
+# ------------------------------------------------------------------ init
+def _init_layer(key, kind: str, cfg: ArchConfig):
+    dt = _dtype(cfg)
+    d = cfg.d_model
+    ks = jax.random.split(key, 3)
+    p: dict = {"norm1": L.init_rmsnorm(d, dt)}
+    if kind in ("attn", "local"):
+        p["attn"] = L.init_attention(ks[0], cfg, dt)
+    elif kind == "rglru":
+        p["rglru"] = init_rglru(ks[0], cfg, dt)
+    elif kind == "ssm":
+        p["ssm"] = init_ssm(ks[0], cfg, dt)
+        return p  # Mamba2 block has no separate FFN
+    else:
+        raise ValueError(kind)
+    p["norm2"] = L.init_rmsnorm(d, dt)
+    if cfg.is_moe:
+        p["moe"] = init_moe(ks[1], cfg, dt)
+    else:
+        p["ffn"] = L.init_mlp(ks[1], d, cfg.d_ff, cfg, dt)
+    return p
+
+
+def _init_superblock(key, cfg: ArchConfig):
+    pat = cfg.block_pattern
+    ks = jax.random.split(key, len(pat))
+    return {f"b{i}_{kind}": _init_layer(ks[i], kind, cfg)
+            for i, kind in enumerate(pat)}
+
+
+def init_params(key, cfg: ArchConfig):
+    dt = _dtype(cfg)
+    period = cfg.pattern_period()
+    n_super, n_tail = divmod(cfg.n_layers, period)
+    keys = jax.random.split(key, 4)
+
+    params: dict = {}
+    if cfg.input_mode == "tokens":
+        params["embed"] = (
+            0.02 * jax.random.normal(keys[0], (cfg.padded_vocab, cfg.d_model))
+        ).astype(dt)
+    if n_super:
+        sb_keys = jax.random.split(keys[1], n_super)
+        params["superblocks"] = jax.vmap(
+            lambda k: _init_superblock(k, cfg)
+        )(sb_keys)
+    if n_tail:
+        tail_keys = jax.random.split(keys[2], n_tail)
+        pat = cfg.block_pattern
+        params["tail"] = {
+            f"t{i}_{pat[i]}": _init_layer(tail_keys[i], pat[i], cfg)
+            for i in range(n_tail)
+        }
+    params["final_norm"] = L.init_rmsnorm(cfg.d_model, dt)
+    if not cfg.tie_embeddings:
+        params["lm_head"] = L.init_dense(
+            keys[3], cfg.d_model, cfg.padded_vocab, dt)
+    return params
+
+
+# ------------------------------------------------------------------ caches
+def init_cache(cfg: ArchConfig, batch: int, ctx_len: int, dtype=jnp.bfloat16):
+    """Per-layer decode caches, grouped like the params (stacked + tail)."""
+
+    def one(kind):
+        if kind == "attn":
+            shape = (batch, ctx_len, cfg.n_kv_heads, cfg.d_head)
+            return {"k": jnp.zeros(shape, dtype), "v": jnp.zeros(shape, dtype)}
+        if kind == "local":
+            shape = (batch, min(cfg.window, ctx_len), cfg.n_kv_heads, cfg.d_head)
+            return {"k": jnp.zeros(shape, dtype), "v": jnp.zeros(shape, dtype)}
+        if kind == "rglru":
+            return init_rglru_state(cfg, batch)
+        if kind == "ssm":
+            return init_ssm_state(cfg, batch)
+        raise ValueError(kind)
+
+    pat = cfg.block_pattern
+    period = cfg.pattern_period()
+    n_super, n_tail = divmod(cfg.n_layers, period)
+    cache: dict = {}
+    if n_super:
+        sb = {f"b{i}_{kind}": one(kind) for i, kind in enumerate(pat)}
+        cache["superblocks"] = jax.tree.map(
+            lambda x: jnp.broadcast_to(x, (n_super, *x.shape)).copy(), sb)
+    if n_tail:
+        cache["tail"] = {f"t{i}_{pat[i]}": one(pat[i]) for i in range(n_tail)}
+    return cache
+
+
+# ------------------------------------------------------------------ blocks
+def _apply_layer(
+    kind: str,
+    p: dict,
+    x: jax.Array,
+    cfg: ArchConfig,
+    positions: jax.Array,
+    cache: Optional[dict],
+    cache_index,
+) -> Tuple[jax.Array, jax.Array, Optional[dict]]:
+    """Pre-norm residual block. Returns (x, aux_loss, new_cache)."""
+    aux = jnp.zeros((), jnp.float32)
+    h = L.rmsnorm(p["norm1"], x)
+    new_cache = None
+    if kind in ("attn", "local"):
+        out, new_cache = L.attention(
+            p["attn"], h, cfg, local=(kind == "local"), positions=positions,
+            cache=cache, cache_index=cache_index)
+        x = x + out
+        h2 = L.rmsnorm(p["norm2"], x)
+        if cfg.is_moe:
+            out2, aux = moe(p["moe"], h2, cfg)
+        else:
+            out2 = L.mlp(p["ffn"], h2, cfg)
+        x = x + out2
+    elif kind == "rglru":
+        if cache is None:
+            out = rglru_train(p["rglru"], h, cfg)
+        else:
+            out, new_cache = rglru_decode(p["rglru"], h, cfg, cache)
+        x = x + out
+        h2 = L.rmsnorm(p["norm2"], x)
+        if cfg.is_moe:
+            out2, aux = moe(p["moe"], h2, cfg)
+        else:
+            out2 = L.mlp(p["ffn"], h2, cfg)
+        x = x + out2
+    elif kind == "ssm":
+        if cache is None:
+            out = ssm_train(p["ssm"], h, cfg)
+        else:
+            out, new_cache = ssm_decode(p["ssm"], h, cfg, cache)
+        x = x + out
+    else:
+        raise ValueError(kind)
+    return x, aux, new_cache
+
+
+def _apply_superblock(p_sb, x, cfg, positions, cache_sb, cache_index):
+    aux_total = jnp.zeros((), jnp.float32)
+    new_caches = {} if cache_sb is not None else None
+    for i, kind in enumerate(cfg.block_pattern):
+        name = f"b{i}_{kind}"
+        c = cache_sb[name] if cache_sb is not None else None
+        x, aux, nc = _apply_layer(
+            kind, p_sb[name], x, cfg, positions, c, cache_index)
+        aux_total = aux_total + aux
+        if new_caches is not None:
+            new_caches[name] = nc
+    return x, aux_total, new_caches
+
+
+# ------------------------------------------------------------------ forward
+def forward(
+    params: dict,
+    inputs: jax.Array,
+    cfg: ArchConfig,
+    *,
+    cache: Optional[dict] = None,
+    cache_index=None,
+    positions: Optional[jax.Array] = None,
+):
+    """Returns (logits, aux_loss, new_cache).
+
+    ``inputs``: int32 token ids (B, S) — or f32/bf16 embeddings (B, S, D)
+    when ``cfg.input_mode == "embeddings"`` (modality-stub archs).
+    """
+    if cfg.input_mode == "tokens":
+        x = params["embed"][inputs].astype(_dtype(cfg))
+    else:
+        x = inputs.astype(_dtype(cfg))
+    b, s = x.shape[:2]
+    x = shard(x, "data", None, None)
+
+    if positions is None:
+        if cache is None:
+            positions = jnp.broadcast_to(jnp.arange(s), (b, s))
+        else:
+            # scalar or per-sequence (B,) decode index
+            idx = jnp.broadcast_to(jnp.asarray(cache_index), (b,))
+            positions = idx[:, None]
+
+    aux_total = jnp.zeros((), jnp.float32)
+    new_cache: dict = {}
+
+    if "superblocks" in params:
+        p_stack = params["superblocks"]
+        n_super = jax.tree.leaves(p_stack)[0].shape[0]
+
+        if cache is None and not cfg.scan_layers:
+            # Unrolled depth: O(n_layers) HLO, used by the roofline pass
+            # because cost_analysis counts scan bodies exactly once.
+            for i in range(n_super):
+                p_sb = jax.tree.map(lambda a: a[i], p_stack)
+                blk = (_ckpt(_apply_superblock, cfg, static_argnums=(2,))
+                       if cfg.remat else _apply_superblock)
+                x, aux_sb, _ = blk(p_sb, x, cfg, positions, None, cache_index)
+                x = shard(x, "data", None, "model")
+                aux_total = aux_total + aux_sb
+        elif cache is None:
+            def body(carry, p_sb):
+                x, aux = carry
+                xo, aux_sb, _ = _apply_superblock(
+                    p_sb, x, cfg, positions, None, cache_index)
+                # keep the saved remat residual 2D-sharded (data × model):
+                # un-sharded D made the (L, B, S, D) scan residual stack the
+                # second-largest buffer in mamba2 train (§Perf P1)
+                xo = shard(xo, "data", None, "model")
+                return (xo, aux + aux_sb), None
+
+            body = _ckpt(body, cfg) if cfg.remat else body
+            (x, aux_total), _ = jax.lax.scan(body, (x, aux_total), p_stack)
+        elif not cfg.scan_layers:
+            c_stack = cache["superblocks"]
+            ncs = []
+            for i in range(n_super):
+                p_sb = jax.tree.map(lambda a: a[i], p_stack)
+                c_sb = jax.tree.map(lambda a: a[i], c_stack)
+                x, aux_sb, nc = _apply_superblock(
+                    p_sb, x, cfg, positions, c_sb, cache_index)
+                aux_total = aux_total + aux_sb
+                ncs.append(nc)
+            new_cache["superblocks"] = jax.tree.map(
+                lambda *xs: jnp.stack(xs), *ncs)
+        else:
+            c_stack = cache["superblocks"]
+
+            def body(carry, inp):
+                x, aux = carry
+                p_sb, c_sb = inp
+                xo, aux_sb, nc = _apply_superblock(
+                    p_sb, x, cfg, positions, c_sb, cache_index)
+                return (xo, aux + aux_sb), nc
+
+            (x, aux_total), nc_stack = jax.lax.scan(
+                body, (x, aux_total), (p_stack, c_stack))
+            new_cache["superblocks"] = nc_stack
+
+    if "tail" in params:
+        new_tail = {}
+        for name, p_l in params["tail"].items():
+            kind = name.split("_", 1)[1]
+            c = cache["tail"][name] if cache is not None else None
+            x, aux, nc = _apply_layer(
+                kind, p_l, x, cfg, positions, c, cache_index)
+            aux_total = aux_total + aux
+            new_tail[name] = nc
+        if cache is not None:
+            new_cache["tail"] = new_tail
+
+    x = L.rmsnorm(params["final_norm"], x)
+    if cfg.tie_embeddings:
+        logits = x @ params["embed"].T.astype(x.dtype)
+    else:
+        logits = L.dense(params["lm_head"], x, cfg.cim, "head")
+    logits = shard(logits, "data", None, "model")
+    if cfg.padded_vocab != cfg.vocab_size:
+        # mask pad-vocab columns (fused elementwise; keeps the model-axis
+        # sharding that vocab padding buys — §Perf iteration P1)
+        pad = jax.lax.broadcasted_iota(
+            jnp.int32, logits.shape, logits.ndim - 1) >= cfg.vocab_size
+        logits = jnp.where(pad, jnp.asarray(-1e30, logits.dtype), logits)
+    return logits, aux_total, (new_cache if cache is not None else None)
+
+
+# ------------------------------------------------------------------ losses
+def train_loss(params, batch: dict, cfg: ArchConfig, aux_weight: float = 0.01):
+    """batch: {"inputs": tokens or embeddings, "labels": (B,S) int32}."""
+    logits, aux, _ = forward(params, batch["inputs"], cfg)
+    logits = logits.astype(jnp.float32)
+    labels = batch["labels"]
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    nll = -jnp.take_along_axis(logp, labels[..., None], axis=-1)[..., 0]
+    mask = batch.get("mask")
+    if mask is None:
+        loss = jnp.mean(nll)
+    else:
+        loss = jnp.sum(nll * mask) / jnp.maximum(jnp.sum(mask), 1.0)
+    total = loss + aux_weight * aux
+    return total, {"loss": loss, "aux_loss": aux, "total": total}
+
+
+def decode_step(params, token, cfg: ArchConfig, cache, cache_index):
+    """One decode step: token (B, 1) [or (B, 1, D) embeddings] -> logits.
+
+    ``cache_index`` is a scalar or per-sequence (B,) int32 vector — the
+    latter enables continuous batching with slots at different lengths."""
+    logits, _, new_cache = forward(
+        params, token, cfg, cache=cache, cache_index=cache_index)
+    return logits[:, -1, :], new_cache

@@ -1,0 +1,196 @@
+"""Mesh-aware sharding helpers and parameter partition rules.
+
+The production mesh axes are ("pod", "data", "model") (multi-pod) or
+("data", "model") (single pod).  Parameters are 2D-sharded — FSDP over the
+("pod","data") axes and tensor-parallel over "model" — with *best-effort*
+divisibility: a dim is only sharded if its size divides the axis size, so one
+rule set serves all ten architectures (vocab 151936 is not 256-divisible,
+expert counts differ, etc.). GSPMD propagates the rest.
+
+``set_mesh``/``shard`` give layers a way to drop activation sharding
+constraints without threading the mesh through every call (no-op when no
+mesh is active — smoke tests and benches run un-meshed).
+"""
+from __future__ import annotations
+
+import re
+from contextlib import contextmanager
+from typing import Optional
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+__all__ = [
+    "set_mesh",
+    "get_mesh",
+    "use_mesh",
+    "shard",
+    "batch_axes",
+    "axis_divides",
+    "param_specs",
+    "named_sharding_tree",
+]
+
+_ACTIVE_MESH: Optional[Mesh] = None
+
+
+def set_mesh(mesh: Optional[Mesh]) -> None:
+    global _ACTIVE_MESH
+    _ACTIVE_MESH = mesh
+
+
+def get_mesh() -> Optional[Mesh]:
+    return _ACTIVE_MESH
+
+
+@contextmanager
+def use_mesh(mesh: Mesh):
+    prev = get_mesh()
+    set_mesh(mesh)
+    try:
+        yield mesh
+    finally:
+        set_mesh(prev)
+
+
+def batch_axes(mesh: Optional[Mesh] = None):
+    """Mesh axes that shard the batch dim: ("pod","data") when present."""
+    mesh = mesh or _ACTIVE_MESH
+    if mesh is None:
+        return None
+    axes = tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+    return axes or None
+
+
+def axis_divides(n: int, axis: str) -> bool:
+    """True when dim size ``n`` divides the active mesh's ``axis`` size
+    (True with no active mesh — constraints are no-ops then anyway)."""
+    mesh = _ACTIVE_MESH
+    if mesh is None or axis not in mesh.axis_names:
+        return True
+    return n % mesh.shape[axis] == 0
+
+
+def _axis_size(mesh: Mesh, axis) -> int:
+    if axis is None:
+        return 1
+    if isinstance(axis, (tuple, list)):
+        return int(np.prod([mesh.shape[a] for a in axis]))
+    return mesh.shape[axis]
+
+
+def shard(x: jax.Array, *spec) -> jax.Array:
+    """Best-effort with_sharding_constraint; no-op without an active mesh.
+
+    ``spec`` entries: "data" expands to the batch axes; "all" to every mesh
+    axis (batch + model — e.g. attention activations whose head count does
+    not divide the model axis get their *batch* spread over all chips);
+    "model"; None. Entries whose dim size is not divisible by the axis size
+    are dropped.
+    """
+    mesh = _ACTIVE_MESH
+    if mesh is None:
+        return x
+    resolved = []
+    for dim, ax in zip(x.shape, spec):
+        if ax == "data":
+            ax = batch_axes(mesh)
+        elif ax == "all":
+            ax = tuple(mesh.axis_names)
+        if ax is not None and dim % _axis_size(mesh, ax) != 0:
+            ax = None
+        resolved.append(ax)
+    return jax.lax.with_sharding_constraint(
+        x, NamedSharding(mesh, P(*resolved))
+    )
+
+
+# ------------------------------------------------------------------ params
+# Rules: (path regex, preferred spec per dim). "model" = TP axis,
+# "fsdp" = the ("pod","data") product. Dims that don't divide fall back
+# to replication for that dim.
+_RULES = [
+    (r"embed", ("model", "fsdp")),
+    (r"lm_head", ("fsdp", "model")),
+    (r"router", (None, "model")),
+    # MoE experts: (E, D, F) — expert dim over model when divisible,
+    # else F over model (intra-expert TP).
+    (r"experts.*w[ig]$", ("model", "fsdp", None)),
+    (r"experts.*wo$", ("model", None, "fsdp")),
+    (r"\bwq\b|\bwk\b|\bwv\b|\bwi\b|\bwg\b", ("fsdp", "model")),
+    (r"\bwo\b", ("model", "fsdp")),
+    # ssm / rglru projections
+    (r"in_proj|x_proj|gate", ("fsdp", "model")),
+    (r"out_proj", ("model", "fsdp")),
+    (r"conv", (None, None, None)),
+]
+
+
+def _spec_for(path: str, shape, mesh: Mesh, use_fsdp: bool = True) -> P:
+    fsdp = batch_axes(mesh) if use_fsdp else None
+    # MoE expert weights need a fallback: EP over "model" when the expert
+    # count divides it, else intra-expert TP on the hidden dim (e.g. grok's
+    # 8 experts at 16-way TP).
+    if re.search(r"experts", path) and len(shape) >= 3:
+        e = shape[-3]
+        if e % _axis_size(mesh, "model") == 0:
+            pref = (("model", "fsdp", None) if path.endswith(("wi", "wg"))
+                    else ("model", None, "fsdp"))
+        else:
+            pref = ((None, "fsdp", "model") if path.endswith(("wi", "wg"))
+                    else (None, "model", "fsdp"))
+        return _align(pref, shape, mesh, fsdp)
+    for pat, pref in _RULES:
+        if re.search(pat, path):
+            return _align(pref, shape, mesh, fsdp)
+    return P()  # replicate (norms, biases, scalars)
+
+
+def _align(pref, shape, mesh, fsdp) -> P:
+    # Right-align prefs to the trailing dims: scanned super-block params
+    # carry a leading (n_layers/period) stacking dim that must stay
+    # unsharded.
+    pad = max(0, len(shape) - len(pref))
+    aligned = (None,) * pad + tuple(pref[-len(shape):])
+    spec = []
+    used = set()
+    for dim, ax in zip(shape, aligned):
+        ax = fsdp if ax == "fsdp" else ax
+        key = tuple(ax) if isinstance(ax, (tuple, list)) else ax
+        if ax is None or key in used or dim % _axis_size(mesh, ax) != 0:
+            spec.append(None)
+        else:
+            used.add(key)
+            spec.append(ax)
+    return P(*spec)
+
+
+def param_specs(params_shape, mesh: Mesh, use_fsdp: bool = True):
+    """PartitionSpec pytree for a (possibly abstract) params pytree.
+
+    ``use_fsdp=False`` gives the ZeRO-1 layout: tensors keep only their
+    "model" (TP) sharding and are replicated over the data axes — pair it
+    with FSDP-sharded optimizer state to trade param replication for the
+    elimination of per-step weight all-gathers.
+    """
+    flat = jax.tree_util.tree_flatten_with_path(params_shape)[0]
+
+    def name(path):
+        return "/".join(str(getattr(k, "key", k)) for k in path)
+
+    specs = {name(p): _spec_for(name(p), v.shape, mesh, use_fsdp)
+             for p, v in flat}
+
+    def mapper(path, v):
+        return specs[name(path)]
+
+    return jax.tree_util.tree_map_with_path(mapper, params_shape)
+
+
+def named_sharding_tree(spec_tree, mesh: Mesh):
+    return jax.tree.map(
+        lambda s: NamedSharding(mesh, s),
+        spec_tree,
+        is_leaf=lambda s: isinstance(s, P),
+    )

@@ -1,0 +1,171 @@
+"""AdamW with warmup-cosine schedule, global-norm clipping, and an optional
+int8 error-feedback gradient-compression hook for the DP all-reduce.
+
+Pure-pytree implementation (no optax dependency): state = {m, v, count,
+[err]} mirroring the param tree, so parameter sharding specs apply to the
+optimizer state unchanged — the property that matters at 512+ ways.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["OptimizerConfig", "init_opt_state", "apply_updates", "schedule",
+           "compress_grads", "decompress_grads"]
+
+
+@dataclasses.dataclass(frozen=True)
+class OptimizerConfig:
+    lr: float = 3e-4
+    warmup_steps: int = 100
+    total_steps: int = 10_000
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    clip_norm: float = 1.0
+    grad_compression: bool = False     # int8 error-feedback DP compression
+    # "adamw": m+v f32 (8 B/param). "adafactor": factored second moment
+    # (~0 B/param for matrices) — the memory-side lever for 100B+ models.
+    algorithm: str = "adamw"
+
+
+def schedule(cfg: OptimizerConfig, step: jax.Array) -> jax.Array:
+    warm = jnp.minimum(step / jnp.maximum(cfg.warmup_steps, 1), 1.0)
+    prog = jnp.clip(
+        (step - cfg.warmup_steps)
+        / jnp.maximum(cfg.total_steps - cfg.warmup_steps, 1),
+        0.0, 1.0)
+    cos = 0.5 * (1.0 + jnp.cos(jnp.pi * prog))
+    return cfg.lr * warm * (0.1 + 0.9 * cos)
+
+
+def init_opt_state(params, cfg: OptimizerConfig):
+    zeros32 = lambda p: jnp.zeros(p.shape, jnp.float32)
+    if cfg.algorithm == "adafactor":
+        def vrow(p):
+            return (jnp.zeros(p.shape[:-1], jnp.float32) if p.ndim >= 2
+                    else jnp.zeros(p.shape, jnp.float32))
+
+        def vcol(p):
+            return (jnp.zeros(p.shape[:-2] + p.shape[-1:], jnp.float32)
+                    if p.ndim >= 2 else jnp.zeros((1,), jnp.float32))
+
+        state = {
+            "vr": jax.tree.map(vrow, params),
+            "vc": jax.tree.map(vcol, params),
+            "count": jnp.zeros((), jnp.int32),
+        }
+    else:
+        state = {
+            "m": jax.tree.map(zeros32, params),
+            "v": jax.tree.map(zeros32, params),
+            "count": jnp.zeros((), jnp.int32),
+        }
+    if cfg.grad_compression:
+        state["err"] = jax.tree.map(zeros32, params)
+    return state
+
+
+# ---------------------------------------------------------- compression
+def compress_grads(grads, err):
+    """int8 per-tensor scaled quantization with error feedback.
+
+    Returns (int8 tree, scales tree, new residuals). The all-reduce then
+    moves 4x fewer bytes; residuals re-enter next step (convergence-safe).
+    """
+    def one(g, e):
+        g = g.astype(jnp.float32) + e
+        scale = jnp.maximum(jnp.max(jnp.abs(g)), 1e-12) / 127.0
+        q = jnp.clip(jnp.round(g / scale), -127, 127).astype(jnp.int8)
+        return q, scale, g - q.astype(jnp.float32) * scale
+
+    flat, treedef = jax.tree.flatten(grads)
+    eflat = jax.tree.leaves(err)
+    qs, scales, errs = zip(*[one(g, e) for g, e in zip(flat, eflat)])
+    unf = lambda xs: jax.tree.unflatten(treedef, list(xs))
+    return unf(qs), unf(scales), unf(errs)
+
+
+def decompress_grads(q, scales):
+    return jax.tree.map(
+        lambda qq, s: qq.astype(jnp.float32) * s, q, scales)
+
+
+# ---------------------------------------------------------- update
+def apply_updates(
+    params, grads, state, cfg: OptimizerConfig
+) -> Tuple[dict, dict, dict]:
+    """Returns (new_params, new_state, metrics)."""
+    count = state["count"] + 1
+    lr = schedule(cfg, count)
+
+    gnorm = jnp.sqrt(sum(
+        jnp.sum(jnp.square(g.astype(jnp.float32)))
+        for g in jax.tree.leaves(grads)))
+    clip = jnp.minimum(1.0, cfg.clip_norm / jnp.maximum(gnorm, 1e-12))
+
+    if cfg.algorithm == "adafactor":
+        return _apply_adafactor(params, grads, state, cfg, count, lr, clip,
+                                gnorm)
+
+    def upd(p, g, m, v):
+        g = g.astype(jnp.float32) * clip
+        m = cfg.b1 * m + (1 - cfg.b1) * g
+        v = cfg.b2 * v + (1 - cfg.b2) * jnp.square(g)
+        mh = m / (1 - cfg.b1 ** count.astype(jnp.float32))
+        vh = v / (1 - cfg.b2 ** count.astype(jnp.float32))
+        step_ = mh / (jnp.sqrt(vh) + cfg.eps)
+        if p.ndim >= 2:  # decoupled weight decay on matrices only
+            step_ = step_ + cfg.weight_decay * p.astype(jnp.float32)
+        newp = p.astype(jnp.float32) - lr * step_
+        return newp.astype(p.dtype), m, v
+
+    out = jax.tree.map(upd, params, grads, state["m"], state["v"])
+    leaves, treedef = jax.tree.flatten(out, is_leaf=lambda t: isinstance(t, tuple))
+    newp = jax.tree.unflatten(treedef, [l[0] for l in leaves])
+    newm = jax.tree.unflatten(treedef, [l[1] for l in leaves])
+    newv = jax.tree.unflatten(treedef, [l[2] for l in leaves])
+    new_state = dict(state, m=newm, v=newv, count=count)
+    return newp, new_state, {"grad_norm": gnorm, "lr": lr}
+
+
+def _apply_adafactor(params, grads, state, cfg, count, lr, clip, gnorm):
+    """Adafactor (Shazeer & Stern): rank-1 factored second moment for
+    matrices, no first moment — ~0 optimizer bytes per parameter."""
+    b2 = 1.0 - count.astype(jnp.float32) ** -0.8  # step-dependent decay
+    eps = 1e-30
+
+    def upd(p, g, vr, vc):
+        g = g.astype(jnp.float32) * clip
+        g2 = jnp.square(g) + eps
+        if p.ndim >= 2:
+            vr_n = b2 * vr + (1 - b2) * jnp.mean(g2, axis=-1)
+            vc_n = b2 * vc + (1 - b2) * jnp.mean(g2, axis=-2)
+            denom = jnp.maximum(
+                jnp.mean(vr_n, axis=-1, keepdims=True), eps)
+            vhat = (vr_n[..., None] * vc_n[..., None, :]) / denom[..., None]
+            step_ = g / jnp.sqrt(vhat + eps)
+        else:
+            vr_n = b2 * vr + (1 - b2) * g2
+            vc_n = vc
+            step_ = g / jnp.sqrt(vr_n + eps)
+        # update clipping (RMS <= 1) per the paper
+        rms = jnp.sqrt(jnp.mean(jnp.square(step_)) + eps)
+        step_ = step_ / jnp.maximum(1.0, rms)
+        if p.ndim >= 2:
+            step_ = step_ + cfg.weight_decay * p.astype(jnp.float32)
+        newp = p.astype(jnp.float32) - lr * step_
+        return newp.astype(p.dtype), vr_n, vc_n
+
+    out = jax.tree.map(upd, params, grads, state["vr"], state["vc"])
+    leaves, treedef = jax.tree.flatten(
+        out, is_leaf=lambda t: isinstance(t, tuple))
+    newp = jax.tree.unflatten(treedef, [l[0] for l in leaves])
+    newr = jax.tree.unflatten(treedef, [l[1] for l in leaves])
+    newc = jax.tree.unflatten(treedef, [l[2] for l in leaves])
+    new_state = dict(state, vr=newr, vc=newc, count=count)
+    return newp, new_state, {"grad_norm": gnorm, "lr": lr}

@@ -1,0 +1,219 @@
+"""Unit + property tests for the core CIM library (formats, MAC, ADC, energy)."""
+import math
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core import adc as A
+from repro.core import distributions as D
+from repro.core import energy as E
+from repro.core import formats as F
+from repro.core import mac as M
+
+FMT_STRAT = st.tuples(st.integers(1, 4), st.integers(1, 5)).map(
+    lambda t: F.FPFormat(*t)
+)
+
+
+# ---------------------------------------------------------------- formats
+@settings(max_examples=30, deadline=None)
+@given(fmt=FMT_STRAT, seed=st.integers(0, 2**31 - 1))
+def test_quantize_idempotent_and_bounded(fmt, seed):
+    x = jax.random.uniform(jax.random.PRNGKey(seed), (512,), minval=-1, maxval=1)
+    xq = F.quantize(x, fmt)
+    np.testing.assert_allclose(F.quantize(xq, fmt), xq, rtol=0, atol=0)
+    assert float(jnp.max(jnp.abs(xq))) <= fmt.max_value
+    # quantization error bounded by half LSB at each value's exponent
+    # (excluding saturated samples, which clamp to max_value by design)
+    _, _, e = F.decompose(xq, fmt)
+    lsb = F.pow2i(e - fmt.e_max - fmt.n_man - 1)
+    sat = jnp.abs(x) >= fmt.max_value
+    assert bool(jnp.all(sat | (jnp.abs(x - xq) <= 0.5 * lsb + 1e-7)))
+
+
+@settings(max_examples=30, deadline=None)
+@given(fmt=FMT_STRAT, seed=st.integers(0, 2**31 - 1))
+def test_decompose_compose_roundtrip(fmt, seed):
+    x = jax.random.normal(jax.random.PRNGKey(seed), (512,)) * 0.3
+    xq = F.quantize(jnp.clip(x, -1, 1), fmt)
+    s, m, e = F.decompose(xq, fmt)
+    rec = F.compose(s, m, e, fmt)
+    np.testing.assert_allclose(rec, xq, rtol=0, atol=1e-9)
+    assert bool(jnp.all((e >= 1) & (e <= fmt.e_max)))
+    assert bool(jnp.all((m >= 0) & (m < 1)))
+
+
+def test_fp_sqnr_formula_distribution_invariant():
+    """C1: measured SQNR tracks 6.02 N_M + 10.79 dB, independent of data."""
+    key = jax.random.PRNGKey(0)
+    for fmt in [F.FPFormat(2, 2), F.FPFormat(3, 3), F.FPFormat(3, 4)]:
+        for dist in [D.uniform(), D.gaussian_clipped(4.0)]:
+            x = dist(key, (1 << 18,))
+            got = float(F.measured_sqnr_db(x, F.quantize(x, fmt)))
+            # in-range data => within ~3.5 dB of the formula (the paper states ≈)
+            assert abs(got - F.sqnr_db(fmt)) < 3.5, (fmt.name, dist.name, got)
+
+
+def test_max_entropy_on_grid():
+    fmt = F.FP6_E3M2
+    x = F.max_entropy_sample(jax.random.PRNGKey(1), (1 << 16,), fmt)
+    np.testing.assert_array_equal(np.asarray(F.quantize(x, fmt)), np.asarray(x))
+
+
+def test_int_quantize_grid():
+    fmt = F.IntFormat(4)
+    x = jnp.linspace(-1, 1, 1001)
+    xq = F.int_quantize(x, fmt)
+    codes = np.asarray(xq) * fmt.levels
+    np.testing.assert_allclose(codes, np.round(codes), atol=1e-5)
+
+
+# ---------------------------------------------------------------- MAC chains
+def _col_data(key, n_r=32, cols=2048, fmt=F.FP6_E3M2):
+    kx, kw = jax.random.split(key)
+    dist = D.gaussian_clipped(4.0)
+    xq = F.quantize(dist(kx, (cols, n_r)), fmt)
+    wq = F.quantize(dist(kw, (cols, n_r)), fmt)
+    return xq, wq
+
+
+@pytest.mark.parametrize("gran", ["row", "unit"])
+def test_grmac_reconstructs_exact_dot(gran):
+    """With an ideal ADC the GR-MAC reproduces Σ x·w exactly (§III-B2)."""
+    fmt = F.FP6_E3M2
+    xq, wq = _col_data(jax.random.PRNGKey(0), fmt=fmt)
+    fn = M.gr_mac_row if gran == "row" else M.gr_mac_unit
+    args = (xq, wq, fmt) if gran == "row" else (xq, wq, fmt, fmt)
+    out = fn(*args, 30.0)
+    ref = jnp.sum(xq * wq, axis=-1)
+    np.testing.assert_allclose(np.asarray(out.z), np.asarray(ref), rtol=1e-5, atol=1e-5)
+    assert float(jnp.max(jnp.abs(out.v))) <= 1.0 + 1e-6  # no clipping ever
+
+
+def test_voltage_never_clips_property():
+    """GR-MAC compute-line voltage is a weighted mean of |.|<=1 values."""
+    for seed in range(5):
+        xq, wq = _col_data(jax.random.PRNGKey(seed))
+        for out in [
+            M.gr_mac_row(xq, wq, F.FP6_E3M2, 8.0),
+            M.gr_mac_unit(xq, wq, F.FP6_E3M2, F.FP6_E3M2, 8.0),
+            M.int_mac(xq, wq, 8.0),
+        ]:
+            assert float(jnp.max(jnp.abs(out.v))) <= 1.0 + 1e-6
+
+
+def test_n_eff_bounds():
+    xq, wq = _col_data(jax.random.PRNGKey(2))
+    out = M.gr_mac_unit(xq, wq, F.FP6_E3M2, F.FP6_E3M2, 8.0)
+    n_r = xq.shape[-1]
+    assert bool(jnp.all(out.n_eff <= n_r + 1e-4))
+    assert bool(jnp.all(out.n_eff >= 1.0 - 1e-4))
+    # equal exponents -> N_eff == N_R exactly
+    g = jnp.ones((7, n_r))
+    np.testing.assert_allclose(np.asarray(M.n_eff(g)), n_r, rtol=1e-6)
+
+
+def test_adc_quantizer():
+    v = jnp.linspace(-1, 1, 999)
+    vq = M.adc_quantize(v, 6.0)
+    delta = 2.0 / 2**6
+    np.testing.assert_allclose(np.asarray(vq / delta), np.round(np.asarray(vq / delta)), atol=1e-5)
+    assert float(jnp.max(jnp.abs(v - vq))) <= delta / 2 + 1e-6
+
+
+# ---------------------------------------------------------------- ADC solver
+def test_enob_monotone_in_margin():
+    key = jax.random.PRNGKey(0)
+    r6 = A.required_enob(key, "conv", D.uniform(), F.FP6_E3M2, margin_db=6.0)
+    r12 = A.required_enob(key, "conv", D.uniform(), F.FP6_E3M2, margin_db=12.0)
+    assert r12.enob > r6.enob
+
+
+def test_paper_claim_C2_upper_bound_1p5_bits():
+    """GR unit-norm upper bound (uniform) >= 1.5 b below conventional lower bound."""
+    key = jax.random.PRNGKey(0)
+    deltas = []
+    for ne in (2, 3, 4):
+        fmt = F.FPFormat(ne, 2)
+        rc = A.required_enob(key, "conv", D.uniform(), fmt)
+        ru = A.required_enob(key, "gr_unit", D.uniform(), fmt)
+        deltas.append(rc.enob - ru.enob)
+    assert min(deltas) >= 1.3, deltas  # paper: 1.5 b (MC tolerance)
+
+
+def test_paper_claim_C3_outliers_6_bits():
+    key = jax.random.PRNGKey(0)
+    fmt = F.FPFormat(3, 2)
+    rc = A.required_enob(key, "conv", D.gaussian_outliers(), fmt)
+    ru = A.required_enob(key, "gr_unit", D.gaussian_outliers(), fmt)
+    assert rc.enob - ru.enob > 6.0, (rc.enob, ru.enob)
+
+
+def test_paper_claim_C8_below_thermal_crossover():
+    key = jax.random.PRNGKey(0)
+    ncross = E.TechParams().n_cross()
+    assert 9.5 < ncross < 10.5  # ~10 b (paper §III-B)
+    for ne in (2, 3, 4):
+        ru = A.required_enob(key, "gr_unit", D.uniform(), F.FPFormat(ne, 2))
+        assert ru.enob < ncross
+
+
+# ---------------------------------------------------------------- energy
+def test_adc_energy_regimes():
+    p = E.TechParams()
+    # technology-limited regime: roughly linear
+    lo = E.adc_energy_fj(4, p) / 4
+    hi = E.adc_energy_fj(8, p) / 8
+    assert hi / lo < 2.0
+    # thermal regime: quadrupling per bit
+    r = E.adc_energy_fj(14, p) / E.adc_energy_fj(13, p)
+    assert 3.0 < r < 4.5
+
+
+def test_adder_tree_count():
+    # 2 inputs of width w -> w FAs
+    assert E.adder_tree_fa_count(2, 4) == 4
+    assert E.adder_tree_fa_count(4, 1) == 2 * 1 + 1 * 2
+    assert E.adder_tree_fa_count(32, 3) > 0
+
+
+def test_energy_breakdown_positive_and_total():
+    d = E.CimDesign("gr_row", F.FP6_E3M2, F.FP4_E2M1, enob=9.0)
+    b = E.energy_per_op_fj(d)
+    assert b.adc > 0 and b.dac > 0 and b.cells > 0 and b.logic > 0
+    assert abs(b.total - (b.adc + b.dac + b.cells + b.logic)) < 1e-12
+
+
+def test_gain_range_limit():
+    d = E.CimDesign("gr_unit", F.FPFormat(4, 2), F.FPFormat(4, 1), enob=8.0)
+    assert d.gain_range_bits == (15 - 1) + (15 - 1)  # way past the 6 b limit
+
+
+def test_paper_claim_C6_fp6_native():
+    """FP6_E3M2: GR processes natively ~29 fJ/Op; conventional out of range."""
+    from repro.core import dse as S
+
+    pt = S.evaluate_point(jax.random.PRNGKey(2), F.FP6_E3M2, n_cols=1 << 12)
+    assert pt.gr is not None and pt.gr.total < 40.0, pt.gr
+    assert pt.conv.total > 100.0  # beyond the practical energy limit
+
+
+def test_global_normalization_roundtrip_and_truncation():
+    """FP->INT global normalization (§II-B2): lossless when the INT width
+    covers mantissa+shift range; lossy (truncation) when narrower — the
+    overhead the GR-MAC eliminates."""
+    fmt = F.FP6_E3M2
+    x = F.quantize(D.gaussian_clipped(4.0)(jax.random.PRNGKey(0), (512, 32)),
+                   fmt)
+    full_width = (fmt.n_man + 1) + (fmt.e_max - 1) + 1  # mantissa+shift+sign
+    aligned, scale = M.global_normalize(x, fmt, full_width)
+    np.testing.assert_allclose(np.asarray(aligned * scale), np.asarray(x),
+                               atol=1e-6)
+    # narrow INT: truncation error appears
+    aligned8, scale8 = M.global_normalize(x, fmt, 6)
+    err = float(jnp.mean(jnp.abs(aligned8 * scale8 - x)))
+    assert err > 1e-5
