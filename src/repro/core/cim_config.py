@@ -16,6 +16,12 @@ grmac      full GR-MAC signal-chain simulation: per-K-block mantissa
 ``granularity`` selects the paper's normalization domain (§III-C); ``n_r``
 is the CIM array depth, i.e. the K-block over which one analog accumulation
 + one ADC conversion happens.
+
+``backend`` picks the grmac execution backend (see ``kernels.dispatch``):
+"auto" (fast XLA path off-TPU, Pallas kernel on TPU), "xla", "pallas",
+"pallas_interpret" (debug), or "ref" (jnp oracle). Threaded through
+``cim_matmul`` and overridable per call site (ServeConfig.cim_backend,
+TrainConfig.cim_backend).
 """
 from __future__ import annotations
 
@@ -35,6 +41,7 @@ class CIMConfig:
     fmt_w: FPFormat = FP4_E2M1
     n_r: int = 32                      # CIM array rows == matmul K-block
     enob: Optional[float] = None       # None -> solve from core.adc defaults
+    backend: str = "auto"              # auto | xla | pallas | pallas_interpret | ref
     # Per-tensor pre-scale: activations are scaled into [-1, 1] by their
     # running absmax before quantization (standard PTQ practice); the scale
     # is folded back after the MAC.
@@ -58,3 +65,6 @@ class CIMConfig:
 
     def with_mode(self, mode: str) -> "CIMConfig":
         return dataclasses.replace(self, mode=mode)
+
+    def with_backend(self, backend: str) -> "CIMConfig":
+        return dataclasses.replace(self, backend=backend)

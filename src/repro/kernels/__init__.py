@@ -1,3 +1,25 @@
-# OPTIONAL layer. Add <name>.py (or .cu) + ops.py + ref.py ONLY
-# for compute hot-spots the paper itself optimizes with a custom
-# kernel. Leave this package empty if the paper has none.
+"""GR-MAC kernel subsystem: one op, many backends.
+
+The paper's core artifact — the gain-ranged MAC matmul — is exposed as a
+single dispatch surface with interchangeable, cross-validated execution
+backends:
+
+    ops.cim_matmul        model-facing op (pre-scale, mode switch, STE
+                          gradients); what ``models.layers`` calls
+    dispatch.grmac_matmul backend selection + shape padding
+    xla.py                fast fully-vectorized pure-XLA backend
+                          (default on CPU/GPU)
+    grmac_matmul.py       Pallas TPU kernel (default on TPU); its
+                          interpret mode is kept as an explicit debug
+                          backend ("pallas_interpret")
+    ref.py                readable pure-jnp oracle ("ref")
+
+Backend choice: ``CIMConfig.backend`` (or a ``backend=`` call override,
+or the ``REPRO_GRMAC_BACKEND`` env var). All backends implement the same
+semantics contract and are cross-checked in tests/test_kernels.py;
+``benchmarks/kernel_bench.py --backend all`` compares their wall time.
+"""
+from repro.kernels.dispatch import BACKENDS, grmac_matmul, resolve_backend
+from repro.kernels.ops import cim_matmul
+
+__all__ = ["BACKENDS", "cim_matmul", "grmac_matmul", "resolve_backend"]

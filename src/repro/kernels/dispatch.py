@@ -1,0 +1,110 @@
+"""Backend dispatch for the GR-MAC matmul.
+
+One entry point, ``grmac_matmul(x, wq, ..., backend=...)``, selects among
+the implementations and owns the shape-padding contract so every caller
+(``ops.cim_matmul``, benchmarks, tests) sees plain ``(M, K) @ (K, N)``:
+
+=================  ==========================================================
+backend            implementation
+=================  ==========================================================
+``auto``           ``pallas`` on TPU, ``xla`` everywhere else (the default;
+                   also overridable with ``REPRO_GRMAC_BACKEND``)
+``xla``            ``xla.grmac_matmul_xla`` — fully-vectorized batched
+                   einsum, jit/vmap/grad-safe, fast on CPU/GPU
+``pallas``         ``grmac_matmul.grmac_matmul_pallas`` — the TPU kernel
+                   (VMEM-streaming MXU lowering); off-TPU it silently runs
+                   in interpret mode, so only pick it explicitly on TPU
+``pallas_interpret``  the Pallas kernel forced through the interpreter —
+                   a *debug* backend for cross-checking the TPU lowering's
+                   semantics off-TPU; orders of magnitude slower than
+                   ``xla`` (see ``benchmarks/kernel_bench.py``)
+``ref``            ``ref.grmac_matmul_ref`` — the readable pure-jnp oracle
+=================  ==========================================================
+
+Padding: every backend requires ``K % n_r == 0`` (an analog column always
+has ``n_r`` physical rows; zero-padded entries still contribute their
+minimum-capacitance gain to the block denominator, exactly like unused
+hardware rows). The Pallas backends additionally need 128-aligned M/N/K
+tiles. ``grmac_matmul`` pads with zeros and slices the result, so both
+families see the *same* padded K blocks and agree numerically.
+"""
+from __future__ import annotations
+
+import math
+import os
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.formats import FPFormat
+
+from .grmac_matmul import grmac_matmul_pallas
+from .ref import grmac_matmul_ref
+from .xla import grmac_matmul_xla
+
+__all__ = ["BACKENDS", "resolve_backend", "grmac_matmul"]
+
+BACKENDS = ("auto", "xla", "pallas", "pallas_interpret", "ref")
+
+_ENV_VAR = "REPRO_GRMAC_BACKEND"
+
+
+def resolve_backend(backend: Optional[str] = None) -> str:
+    """Resolve ``backend`` (None/"auto" -> env var -> platform default)."""
+    b = backend or "auto"
+    if b == "auto":
+        b = os.environ.get(_ENV_VAR, "auto")
+    if b == "auto":
+        b = "pallas" if jax.default_backend() == "tpu" else "xla"
+    if b not in BACKENDS:
+        raise ValueError(
+            f"unknown GR-MAC backend {b!r}; expected one of {BACKENDS}")
+    return b
+
+
+def _pad_to(x: jax.Array, axis: int, mult: int) -> jax.Array:
+    rem = (-x.shape[axis]) % mult
+    if rem == 0:
+        return x
+    pad = [(0, 0)] * x.ndim
+    pad[axis] = (0, rem)
+    return jnp.pad(x, pad)
+
+
+def grmac_matmul(
+    x: jax.Array,
+    wq: jax.Array,
+    *,
+    fmt_x: FPFormat,
+    fmt_w: FPFormat,
+    n_r: int = 32,
+    enob: float = 8.0,
+    granularity: str = "row",
+    backend: Optional[str] = None,
+) -> jax.Array:
+    """(M, K) @ (K, N) GR-MAC matmul via the selected backend.
+
+    ``x`` pre-scaled to [-1, 1]; ``wq`` already on the weight format grid.
+    Arbitrary M/N/K (padding handled here); float32 output.
+    """
+    b = resolve_backend(backend)
+    m, k = x.shape
+    n = wq.shape[1]
+    kwargs = dict(fmt_x=fmt_x, fmt_w=fmt_w, n_r=n_r, enob=enob,
+                  granularity=granularity)
+
+    if b in ("pallas", "pallas_interpret"):
+        bm, bn, bk = 128, 128, math.lcm(128, n_r)
+        xp = _pad_to(_pad_to(x, 0, bm), 1, bk)
+        wp = _pad_to(_pad_to(wq, 0, bk), 1, bn)
+        out = grmac_matmul_pallas(
+            xp, wp, block_m=bm, block_n=bn, block_k=bk,
+            interpret=(True if b == "pallas_interpret" else None), **kwargs)
+        return out[:m, :n]
+
+    xp = _pad_to(x, 1, n_r)
+    wp = _pad_to(wq, 0, n_r)
+    if b == "xla":
+        return grmac_matmul_xla(xp, wp, **kwargs)
+    return grmac_matmul_ref(xp, wp, **kwargs)

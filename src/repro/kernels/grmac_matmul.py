@@ -29,8 +29,8 @@ from typing import Optional
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
-from jax.experimental.pallas import tpu as pltpu
 
+from repro.compat import pallas_tpu_compiler_params
 from repro.core.formats import FPFormat
 
 __all__ = ["grmac_matmul_pallas"]
@@ -174,6 +174,14 @@ def grmac_matmul_pallas(
         block_k=block_k,
     )
     grid = (m // block_m, n // block_n, k // block_k)
+    call_kwargs = {}
+    if not interpret:
+        # interpret mode ignores TPU compiler params (and some JAX versions
+        # reject them there); only attach them for real TPU lowering.
+        params = pallas_tpu_compiler_params(
+            dimension_semantics=("parallel", "parallel", "arbitrary"))
+        if params is not None:
+            call_kwargs["compiler_params"] = params
     return pl.pallas_call(
         kernel,
         grid=grid,
@@ -183,8 +191,6 @@ def grmac_matmul_pallas(
         ],
         out_specs=pl.BlockSpec((block_m, block_n), lambda i, j, s: (i, j)),
         out_shape=jax.ShapeDtypeStruct((m, n), jnp.float32),
-        compiler_params=pltpu.CompilerParams(
-            dimension_semantics=("parallel", "parallel", "arbitrary")
-        ),
         interpret=interpret,
+        **call_kwargs,
     )(x.astype(jnp.float32), wq.astype(jnp.float32))

@@ -10,13 +10,17 @@ Pipeline
 2. mode dispatch:
      off        exact matmul (digital baseline)
      fakequant  format-grid quantization of x and w, exact accumulation
-     grmac      full GR-MAC block simulation (ref path by default; the
-                Pallas kernel on TPU or when use_kernel=True)
-3. straight-through gradients: the backward pass uses the dequantized
-   operands (standard QAT estimator), so the op is trainable.
+     grmac      full GR-MAC block simulation, executed by the backend
+                selected through ``kernels.dispatch`` (``cfg.backend`` or
+                the ``backend=`` override: fast XLA path by default
+                off-TPU, the Pallas kernel on TPU, interpret-mode Pallas
+                and the jnp oracle as explicit debug choices)
+3. straight-through gradients: the backward pass applies the exact-matmul
+   VJP to the *raw* (unquantized, unscaled) saved operands — the standard
+   STE estimator — so the op is trainable.
 
-The ref path and the Pallas kernel implement the same contract and are
-cross-validated in tests/test_kernels.py.
+All GR-MAC backends implement the same contract and are cross-validated in
+tests/test_kernels.py.
 """
 from __future__ import annotations
 
@@ -29,61 +33,15 @@ import jax.numpy as jnp
 from repro.core.cim_config import CIMConfig
 from repro.core.formats import quantize
 
-from .grmac_matmul import grmac_matmul_pallas
-from .ref import grmac_matmul_ref
+from .dispatch import grmac_matmul, resolve_backend
 
 __all__ = ["cim_matmul"]
 
 _EPS = 1e-12
 
 
-def _pad_to(x: jax.Array, axis: int, mult: int) -> jax.Array:
-    size = x.shape[axis]
-    rem = (-size) % mult
-    if rem == 0:
-        return x
-    pad = [(0, 0)] * x.ndim
-    pad[axis] = (0, rem)
-    return jnp.pad(x, pad)
-
-
-def _grmac_2d(xn, wn, cfg: CIMConfig, use_kernel: bool):
-    """Normalized (M,K) @ (K,N) through the GR-MAC simulation."""
-    m, k = xn.shape
-    n = wn.shape[1]
-    wq = quantize(wn, cfg.fmt_w)
-    if use_kernel:
-        bm, bn, bk = 128, 128, max(128, cfg.n_r)
-        xp = _pad_to(_pad_to(xn, 0, bm), 1, bk)
-        wp = _pad_to(_pad_to(wq, 0, bk), 1, bn)
-        out = grmac_matmul_pallas(
-            xp,
-            wp,
-            fmt_x=cfg.fmt_x,
-            fmt_w=cfg.fmt_w,
-            n_r=cfg.n_r,
-            enob=cfg.resolved_enob(),
-            granularity=cfg.granularity,
-            block_m=bm,
-            block_n=bn,
-            block_k=bk,
-        )
-        return out[:m, :n]
-    xp = _pad_to(xn, 1, cfg.n_r)
-    wp = _pad_to(wq, 0, cfg.n_r)
-    return grmac_matmul_ref(
-        xp,
-        wp,
-        fmt_x=cfg.fmt_x,
-        fmt_w=cfg.fmt_w,
-        n_r=cfg.n_r,
-        enob=cfg.resolved_enob(),
-        granularity=cfg.granularity,
-    )
-
-
 @functools.partial(jax.custom_vjp, nondiff_argnums=(2, 3))
-def _cim_matmul_2d(x, w, cfg: CIMConfig, use_kernel: bool):
+def _cim_matmul_2d(x, w, cfg: CIMConfig, backend: str):
     """(M, K) @ (K, N) with CIM numerics and STE gradients."""
     dtype = x.dtype
     x32 = x.astype(jnp.float32)
@@ -95,18 +53,27 @@ def _cim_matmul_2d(x, w, cfg: CIMConfig, use_kernel: bool):
     if cfg.mode == "fakequant":
         out = quantize(xn, cfg.fmt_x) @ quantize(wn, cfg.fmt_w)
     elif cfg.mode == "grmac":
-        out = _grmac_2d(xn, wn, cfg, use_kernel)
+        out = grmac_matmul(
+            xn,
+            quantize(wn, cfg.fmt_w),
+            fmt_x=cfg.fmt_x,
+            fmt_w=cfg.fmt_w,
+            n_r=cfg.n_r,
+            enob=cfg.resolved_enob(),
+            granularity=cfg.granularity,
+            backend=backend,
+        )
     else:  # off
         out = xn @ wn
     return (out * (sx * sw)).astype(dtype)
 
 
-def _fwd(x, w, cfg, use_kernel):
-    out = _cim_matmul_2d(x, w, cfg, use_kernel)
+def _fwd(x, w, cfg, backend):
+    out = _cim_matmul_2d(x, w, cfg, backend)
     return out, (x, w)
 
 
-def _bwd(cfg, use_kernel, res, g):
+def _bwd(cfg, backend, res, g):
     x, w = res
     # Straight-through: gradients flow as if the matmul were exact.
     gx = (g @ w.T.astype(g.dtype)).astype(x.dtype)
@@ -122,14 +89,26 @@ def cim_matmul(
     w: jax.Array,
     cfg: Optional[CIMConfig] = None,
     *,
+    backend: Optional[str] = None,
     use_kernel: Optional[bool] = None,
 ) -> jax.Array:
-    """(..., K) @ (K, N) with CIM numerics per ``cfg`` (None/off = exact)."""
+    """(..., K) @ (K, N) with CIM numerics per ``cfg`` (None/off = exact).
+
+    Backend precedence: ``backend=`` argument > ``cfg.backend`` > platform
+    auto-selection (see ``kernels.dispatch``). ``use_kernel`` is the legacy
+    boolean knob: True forces the Pallas kernel, False the fast XLA path.
+    """
     if cfg is None or not cfg.enabled:
         return x @ w
-    if use_kernel is None:
-        use_kernel = jax.default_backend() == "tpu"
+    if backend is None:
+        if use_kernel is not None:
+            backend = "pallas" if use_kernel else "xla"
+        else:
+            backend = cfg.backend
+    # resolve outside the custom_vjp so the nondiff arg is a concrete,
+    # hashable backend name (stable jit cache key)
+    backend = resolve_backend(backend)
     lead = x.shape[:-1]
     k = x.shape[-1]
-    out = _cim_matmul_2d(x.reshape(-1, k), w, cfg, use_kernel)
+    out = _cim_matmul_2d(x.reshape(-1, k), w, cfg, backend)
     return out.reshape(*lead, w.shape[-1])

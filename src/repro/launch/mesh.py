@@ -13,6 +13,8 @@ from __future__ import annotations
 
 import jax
 
+from repro.compat import make_mesh
+
 __all__ = ["make_production_mesh", "make_local_mesh", "HW"]
 
 
@@ -24,10 +26,6 @@ class HW:
     ICI_BW = 50e9                 # B/s per link
     HBM_BYTES = 16 * 2**30        # 16 GiB per chip
     VMEM_BYTES = 128 * 2**20
-
-
-def _auto(n):
-    return (jax.sharding.AxisType.Auto,) * n
 
 
 def make_production_mesh(*, multi_pod: bool = False, model_parallel: int = 16):
@@ -42,10 +40,10 @@ def make_production_mesh(*, multi_pod: bool = False, model_parallel: int = 16):
     dp = chips_per_pod // model_parallel
     shape = (2, dp, model_parallel) if multi_pod else (dp, model_parallel)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(shape, axes, axis_types=_auto(len(axes)))
+    return make_mesh(shape, axes)
 
 
 def make_local_mesh():
     """A 1×1 mesh over whatever single device is present (tests/examples)."""
     n = len(jax.devices())
-    return jax.make_mesh((n, 1), ("data", "model"), axis_types=_auto(2))
+    return make_mesh((n, 1), ("data", "model"))

@@ -143,7 +143,9 @@ def _train_attention(q, k, v, positions, cfg: ArchConfig, local: bool):
                 return _attend_chunked(q_l, k_l, v_l, posq_l, posk_l,
                                        cfg, local)
 
-            return jax.shard_map(
+            from repro.compat import shard_map
+
+            return shard_map(
                 local_fn, mesh=mesh,
                 in_specs=(qspec, kvspec, kvspec, pq, pk),
                 out_specs=qspec,

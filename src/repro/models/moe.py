@@ -23,6 +23,7 @@ import jax.numpy as jnp
 import numpy as np
 from jax.sharding import PartitionSpec as P
 
+from repro.compat import shard_map
 from repro.configs.base import ArchConfig
 from repro.models.layers import dense, init_dense, init_mlp, mlp
 from repro.parallel.sharding import axis_divides, batch_axes, get_mesh, shard
@@ -104,7 +105,7 @@ def moe(p, x: jax.Array, cfg: ArchConfig) -> Tuple[jax.Array, jax.Array]:
 
     if grouped:
         cap = max(4, int(math.ceil(t / nb * k / e * cfg.capacity_factor)))
-        disp = jax.shard_map(
+        disp = shard_map(
             lambda xf_l, ei_l: _dispatch_local(xf_l, ei_l, e, cap),
             mesh=mesh,
             in_specs=(P(ba, None), P(ba, None)),
@@ -136,7 +137,7 @@ def moe(p, x: jax.Array, cfg: ArchConfig) -> Tuple[jax.Array, jax.Array]:
 
     # --- combine ---
     if grouped:
-        comb = jax.shard_map(
+        comb = shard_map(
             lambda ob_l, sl_l, kp_l, g_l: _combine_local(ob_l, sl_l, kp_l, g_l, k),
             mesh=mesh,
             in_specs=(P(None, ba, None), P(ba), P(ba), P(ba, None)),

@@ -12,6 +12,7 @@ paper optimizes.
 from __future__ import annotations
 
 import dataclasses
+import functools
 from typing import List, Optional
 
 import jax
@@ -23,6 +24,21 @@ from repro.core.dse import evaluate_point
 from repro.models import decode_step, forward, init_cache
 
 __all__ = ["ServeConfig", "Engine", "energy_report"]
+
+
+@functools.lru_cache(maxsize=32)
+def _decode_fn(arch: ArchConfig):
+    """One compiled decode executable per arch, shared by every Engine.
+
+    Compiling the identical decode HLO once per Engine instance (a fresh
+    ``jax.jit(lambda ...)`` each time) lets XLA autotune each copy
+    independently; on CPU that can pick different reduction strategies for
+    different compilations of the *same* program, and a last-ulp logits
+    difference flips greedy argmax near ties. Sharing the executable makes
+    every engine for a given arch bitwise-consistent (and drops the
+    per-engine compile cost).
+    """
+    return jax.jit(lambda p, t, c, i: decode_step(p, t, arch, c, i))
 
 
 def _merge_cache(old, new, mask):
@@ -53,11 +69,16 @@ class ServeConfig:
     max_ctx: int = 2048
     temperature: float = 0.0
     cache_dtype: str = "float32"
+    # GR-MAC backend override for CIM-enabled archs (None keeps the arch's
+    # CIMConfig.backend; see kernels.dispatch for the choices)
+    cim_backend: Optional[str] = None
 
 
 class Engine:
     def __init__(self, arch: ArchConfig, params, cfg: ServeConfig):
         assert arch.input_mode == "tokens", "engine serves token models"
+        if cfg.cim_backend is not None:
+            arch = arch.replace(cim=arch.cim.with_backend(cfg.cim_backend))
         self.arch = arch
         self.cfg = cfg
         self.params = params
@@ -66,8 +87,20 @@ class Engine:
         self.lengths = np.zeros(cfg.batch_slots, np.int32)
         self.active = np.zeros(cfg.batch_slots, bool)
         self.tokens: List[List[int]] = [[] for _ in range(cfg.batch_slots)]
-        self._decode = jax.jit(
-            lambda p, t, c, i: decode_step(p, t, self.arch, c, i))
+        self._decode = _decode_fn(self.arch)
+
+    @staticmethod
+    def _snapshot(host_state: np.ndarray) -> jax.Array:
+        """Immutable device view of mutable per-slot host state.
+
+        ``jnp.asarray(numpy_array)`` is zero-copy on CPU when the buffer is
+        aligned, so the jax Array *aliases* ``self.lengths``/``self.active``.
+        The engine mutates those in place right after dispatching the decode
+        — which executes asynchronously — so without a defensive copy the
+        computation can read the post-increment value and write the KV cache
+        at the wrong slot position (rare, load-dependent token corruption).
+        """
+        return jnp.asarray(host_state.copy())
 
     # ------------------------------------------------------------ prefill
     def add_request(self, prompt: List[int]) -> int:
@@ -94,7 +127,7 @@ class Engine:
         toks[slot, 0] = token
         logits, new_cache = self._decode(
             self.params, jnp.asarray(toks), self.cache,
-            jnp.asarray(self.lengths, np.int32))
+            self._snapshot(self.lengths))
         mask = jnp.zeros(self.cfg.batch_slots, bool).at[slot].set(True)
         self.cache = _merge_cache(self.cache, new_cache, mask)
         self.lengths[slot] += 1
@@ -113,9 +146,9 @@ class Engine:
         # different generation lengths write/attend at their own positions
         logits, new_cache = self._decode(
             self.params, jnp.asarray(toks), self.cache,
-            jnp.asarray(self.lengths, np.int32))
+            self._snapshot(self.lengths))
         self.cache = _merge_cache(
-            self.cache, new_cache, jnp.asarray(self.active))
+            self.cache, new_cache, self._snapshot(self.active))
         out = {}
         for s in range(self.cfg.batch_slots):
             if not self.active[s]:

@@ -43,10 +43,15 @@ class TrainConfig:
     ckpt_dir: Optional[str] = None
     ckpt_every: int = 50
     log_every: int = 10
+    # GR-MAC backend override for CIM-enabled archs (None keeps the arch's
+    # CIMConfig.backend; see kernels.dispatch for the choices)
+    cim_backend: Optional[str] = None
     opt: OptimizerConfig = dataclasses.field(default_factory=OptimizerConfig)
 
 
 def make_train_step(arch: ArchConfig, tcfg: TrainConfig) -> Callable:
+    if tcfg.cim_backend is not None:
+        arch = arch.replace(cim=arch.cim.with_backend(tcfg.cim_backend))
     ocfg = tcfg.opt
     nmb = tcfg.microbatches
 

@@ -69,8 +69,8 @@ from repro.parallel.sharding import param_specs, use_mesh
 from repro.models import init_params, train_loss
 from repro.data.pipeline import DataConfig, SyntheticLM
 
-mesh = jax.make_mesh((2, 4), ("data", "model"),
-                     axis_types=(jax.sharding.AxisType.Auto,) * 2)
+from repro.compat import make_mesh
+mesh = make_mesh((2, 4), ("data", "model"))
 arch = get_config("qwen2-1.5b").reduced().replace(n_layers=2)
 params = init_params(jax.random.PRNGKey(0), arch)
 specs = param_specs(params, mesh)
@@ -112,12 +112,11 @@ from repro.launch.mesh import make_production_mesh
 import repro.launch.mesh as M
 M.make_production_mesh.__defaults__  # noqa
 # monkey: shrink pod for the 8-device test env
-import jax
+from repro.compat import make_mesh
 def mk(multi_pod=False, model_parallel=4, chips=8):
     dp = chips // model_parallel
     shape = (dp, model_parallel)
-    return jax.make_mesh(shape, ("data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,)*2)
+    return make_mesh(shape, ("data", "model"))
 m1 = mk(model_parallel=4)
 m2 = mk(model_parallel=1)
 assert m1.size == m2.size == 8

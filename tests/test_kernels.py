@@ -1,4 +1,6 @@
-"""Pallas GR-MAC kernel vs pure-jnp oracle, across shapes/dtypes/granularities."""
+"""GR-MAC backend cross-validation: fast XLA path vs the jnp oracle (exact),
+Pallas-interpret vs oracle (slow debug cross-check), dispatch resolution,
+and the model-facing cim_matmul op."""
 import jax
 import jax.numpy as jnp
 import numpy as np
@@ -6,9 +8,11 @@ import pytest
 
 from repro.core.cim_config import CIMConfig
 from repro.core.formats import FP4_E2M1, FP6_E3M2, FPFormat, quantize
+from repro.kernels.dispatch import BACKENDS, grmac_matmul, resolve_backend
 from repro.kernels.grmac_matmul import grmac_matmul_pallas
 from repro.kernels.ops import cim_matmul
 from repro.kernels.ref import grmac_matmul_ref
+from repro.kernels.xla import grmac_matmul_xla
 
 
 def _data(key, m, k, n):
@@ -18,6 +22,73 @@ def _data(key, m, k, n):
     return x, w
 
 
+# ------------------------------------------------------------- fast XLA path
+@pytest.mark.parametrize("granularity", ["conv", "row", "unit"])
+@pytest.mark.parametrize(
+    "m,k,n", [(128, 128, 128), (256, 384, 128), (128, 256, 256)]
+)
+def test_xla_backend_matches_ref(granularity, m, k, n):
+    x, w = _data(jax.random.PRNGKey(0), m, k, n)
+    kw = dict(fmt_x=FP6_E3M2, fmt_w=FP4_E2M1, n_r=32, enob=8.0,
+              granularity=granularity)
+    ref = grmac_matmul_ref(x, w, **kw)
+    out = grmac_matmul_xla(x, w, **kw)
+    np.testing.assert_array_equal(np.asarray(out), np.asarray(ref))
+
+
+@pytest.mark.parametrize("granularity", ["conv", "row", "unit"])
+def test_xla_backend_unpadded_shapes(granularity):
+    # no 128-alignment requirement: dispatch pads K to n_r only
+    x, w = _data(jax.random.PRNGKey(7), 7, 100, 13)
+    kw = dict(fmt_x=FP6_E3M2, fmt_w=FP4_E2M1, n_r=32, enob=8.0,
+              granularity=granularity)
+    ref = grmac_matmul(x, w, backend="ref", **kw)
+    out = grmac_matmul(x, w, backend="xla", **kw)
+    assert out.shape == (7, 13)
+    np.testing.assert_array_equal(np.asarray(out), np.asarray(ref))
+
+
+def test_xla_backend_vmap_grad_safe():
+    x, w = _data(jax.random.PRNGKey(8), 32, 128, 16)
+    kw = dict(fmt_x=FP6_E3M2, fmt_w=FP4_E2M1, n_r=32, enob=8.0,
+              granularity="row")
+    vm = jax.vmap(lambda a: grmac_matmul_xla(a, w, **kw))(
+        jnp.stack([x, x * 0.5, -x]))
+    assert vm.shape == (3, 32, 16)
+    g = jax.grad(lambda a: jnp.sum(grmac_matmul_xla(a, w, **kw) ** 2))(x)
+    assert g.shape == x.shape
+    assert bool(jnp.all(jnp.isfinite(g)))
+
+
+# ---------------------------------------------------------------- dispatch
+def test_dispatch_resolution(monkeypatch):
+    monkeypatch.delenv("REPRO_GRMAC_BACKEND", raising=False)
+    auto = resolve_backend(None)
+    assert auto == ("pallas" if jax.default_backend() == "tpu" else "xla")
+    assert resolve_backend("ref") == "ref"
+    monkeypatch.setenv("REPRO_GRMAC_BACKEND", "ref")
+    assert resolve_backend(None) == "ref"
+    assert resolve_backend("auto") == "ref"
+    assert resolve_backend("xla") == "xla"  # explicit beats env
+    with pytest.raises(ValueError):
+        resolve_backend("cuda")
+    assert set(BACKENDS) == {"auto", "xla", "pallas", "pallas_interpret", "ref"}
+
+
+def test_cim_matmul_backend_kwarg():
+    x, w = _data(jax.random.PRNGKey(9), 16, 96, 24)
+    cfg = CIMConfig(mode="grmac", granularity="row", n_r=32)
+    a = cim_matmul(x, w, cfg, backend="xla")
+    b = cim_matmul(x, w, cfg, backend="ref")
+    c = cim_matmul(x, w, cfg.with_backend("xla"))
+    d = cim_matmul(x, w, cfg, use_kernel=False)  # legacy knob -> xla
+    np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    np.testing.assert_array_equal(np.asarray(a), np.asarray(c))
+    np.testing.assert_array_equal(np.asarray(a), np.asarray(d))
+
+
+# ----------------------------------------- Pallas interpret-mode cross-check
+@pytest.mark.slow
 @pytest.mark.parametrize("granularity", ["conv", "row", "unit"])
 @pytest.mark.parametrize(
     "m,k,n", [(128, 128, 128), (256, 384, 128), (128, 256, 256)]
@@ -33,6 +104,7 @@ def test_kernel_matches_ref(granularity, m, k, n):
     np.testing.assert_allclose(np.asarray(out), np.asarray(ref), rtol=1e-5, atol=1e-5)
 
 
+@pytest.mark.slow
 @pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
 @pytest.mark.parametrize("fmt_x", [FP4_E2M1, FP6_E3M2, FPFormat(2, 3)])
 def test_kernel_shape_dtype_sweep(dtype, fmt_x):
@@ -44,6 +116,7 @@ def test_kernel_shape_dtype_sweep(dtype, fmt_x):
     np.testing.assert_allclose(np.asarray(out), np.asarray(ref), rtol=1e-5, atol=1e-5)
 
 
+@pytest.mark.slow
 def test_kernel_multi_kblock_accumulation():
     # K spans several kernel grid steps AND several n_r sub-blocks per step.
     x, w = _data(jax.random.PRNGKey(2), 128, 512, 128)
@@ -53,6 +126,20 @@ def test_kernel_multi_kblock_accumulation():
     np.testing.assert_allclose(np.asarray(out), np.asarray(ref), rtol=1e-5, atol=1e-5)
 
 
+@pytest.mark.slow
+def test_dispatch_pallas_interpret_matches_xla():
+    """The debug backend and the fast backend agree through dispatch,
+    including the shared zero-padding contract."""
+    x, w = _data(jax.random.PRNGKey(3), 64, 160, 40)
+    kw = dict(fmt_x=FP6_E3M2, fmt_w=FP4_E2M1, n_r=32, enob=8.0,
+              granularity="row")
+    slow = grmac_matmul(x, w, backend="pallas_interpret", **kw)
+    fast = grmac_matmul(x, w, backend="xla", **kw)
+    np.testing.assert_allclose(np.asarray(slow), np.asarray(fast),
+                               rtol=1e-5, atol=1e-5)
+
+
+# ------------------------------------------------------------- cim_matmul op
 def test_grmac_accuracy_vs_fakequant():
     # GR-MAC adds only ADC noise on top of format quantization: the distance
     # to the fakequant (exact-accumulation) output must be small at ENOB=8.

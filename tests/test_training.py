@@ -8,6 +8,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
+pytest.importorskip("hypothesis")
 from hypothesis import given, settings
 from hypothesis import strategies as st
 
@@ -245,8 +246,8 @@ def test_elastic_end_to_end(tmp_path):
     # simulate: only 1 "chip" survives; plan keeps model_parallel=1
     shape, axes = fault.plan_remesh(1, 1, pod_size=256)
     assert shape == (1, 1) and axes == ("data", "model")
-    mesh = jax.make_mesh(shape, axes,
-                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    from repro.compat import make_mesh
+    mesh = make_mesh(shape, axes)
     params = init_params(jax.random.PRNGKey(0), arch)
     opt = init_opt_state(params, ocfg)
     state, step = ckpt.restore_checkpoint(
