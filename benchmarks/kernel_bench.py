@@ -12,11 +12,19 @@ Two times per cell:
   shape/config pays it again).
 * ``warm``  — steady-state per-call time after compilation.
 
-The default shape is the paper's deployment regime — an edge-scale decode
-FFN GEMM (16 tokens × d_model 768 × d_ff 3072, paper-cim-120m): small-M
-matmuls are where the CIM path actually runs per decoded token, and where
-the Pallas path's mandatory 128-alignment padding wastes the most work.
-Override with --m/--k/--n for square/training shapes.
+Two shapes by default, both recorded to experiments/bench/kernel_bench.json:
+
+* ``edge_decode`` (16×768×3072, paper-cim-120m FFN) — the paper's
+  deployment regime: small-M matmuls are where the CIM path actually runs
+  per decoded token, and where the Pallas path's mandatory 128-alignment
+  padding wastes the most work.
+* ``train_large_m`` (2048×768×3072) — the training-shape regime the
+  ROADMAP flags, where the blocked einsum is bandwidth-bound.
+  ``pallas_interpret`` is excluded here (the interpreter would take hours
+  at this size, and the debug cross-check adds nothing at scale).
+
+Override with --m/--k/--n for a single custom shape; --smoke runs one tiny
+shape with minimal iterations (the CI bench lane).
 
 On TPU the figure of merit for the ``pallas`` backend is the lowered
 structure; off-TPU ``pallas`` is skipped (it would silently interpret)
@@ -34,13 +42,16 @@ from benchmarks.common import emit, save_json, time_call
 
 _DEFAULT_BACKENDS = ("xla", "ref", "pallas_interpret")
 _GRANS = ["conv", "row", "unit"]
+_SHAPES = {
+    "edge_decode": (16, 768, 3072),
+    "train_large_m": (2048, 768, 3072),
+}
+_SMOKE_SHAPE = (8, 96, 64)
+# backends too slow to run at a given shape (documented above)
+_SHAPE_SKIP = {"train_large_m": {"pallas_interpret"}}
 
 
-def run(backends=None, m=16, k=768, n=3072):
-    if not backends or backends == ["all"]:
-        backends = list(_DEFAULT_BACKENDS)
-        if jax.default_backend() == "tpu":
-            backends.insert(0, "pallas")
+def run_shape(backends, m, k, n, n_iter=5):
     key = jax.random.PRNGKey(0)
     kx, kw = jax.random.split(key)
     x = jax.random.uniform(kx, (m, k), minval=-1, maxval=1)
@@ -59,12 +70,14 @@ def run(backends=None, m=16, k=768, n=3072):
             got = jax.block_until_ready(fn(x, w))
             cold_us = (time.perf_counter() - t0) * 1e6
             interp = b == "pallas_interpret"
-            warm_us = time_call(fn, x, w, n_iter=3 if interp else 5,
+            warm_us = time_call(fn, x, w,
+                                n_iter=min(3, n_iter) if interp else n_iter,
                                 warmup=0)
             results[(b, gran)] = np.asarray(got)
             out["backends"].setdefault(b, {})[gran] = {
                 "cold_us": cold_us, "warm_us": warm_us}
-            emit(f"kernel/{b}/{gran}", warm_us, f"cold_us={cold_us:.0f}")
+            emit(f"kernel/{m}x{k}x{n}/{b}/{gran}", warm_us,
+                 f"cold_us={cold_us:.0f}")
         # oracle agreement (ref is always exact-by-construction)
         oracle = results.get(("ref", gran))
         if oracle is not None:
@@ -74,7 +87,7 @@ def run(backends=None, m=16, k=768, n=3072):
 
     # comparison table + headline speedups
     hdr = " ".join(f"{g + ' cold/warm(us)':>24}" for g in _GRANS)
-    print(f"\n{'backend':<18} {hdr}")
+    print(f"\nshape {m}x{k}x{n}\n{'backend':<18} {hdr}")
     for b in backends:
         per = out["backends"][b]
         print(f"{b:<18} " + " ".join(
@@ -86,7 +99,7 @@ def run(backends=None, m=16, k=768, n=3072):
             g: pi[g]["cold_us"] / xl[g]["cold_us"] for g in _GRANS}
         out["xla_warm_speedup_over_interpret"] = {
             g: pi[g]["warm_us"] / xl[g]["warm_us"] for g in _GRANS}
-        print("\nxla speedup over pallas_interpret (cold trace+compile+run): "
+        print("xla speedup over pallas_interpret (cold trace+compile+run): "
               + ", ".join(f"{g}={v:.0f}x" for g, v in
                           out["xla_cold_speedup_over_interpret"].items()))
         print("xla speedup over pallas_interpret (warm steady-state):      "
@@ -96,7 +109,35 @@ def run(backends=None, m=16, k=768, n=3072):
         gm = float(np.exp(np.mean(np.log(warm))))
         out["xla_warm_speedup_geomean"] = gm
         print(f"geomean warm speedup: {gm:.1f}x")
-    save_json("kernel_bench", out)
+    if "xla" in out["backends"] and "ref" in out["backends"]:
+        rf, xl = out["backends"]["ref"], out["backends"]["xla"]
+        out["xla_warm_speedup_over_ref"] = {
+            g: rf[g]["warm_us"] / xl[g]["warm_us"] for g in _GRANS}
+    return out
+
+
+def run(backends=None, shapes=None, smoke=False, n_iter=5, record=None):
+    """``record`` names the JSON written under experiments/bench/. Only the
+    full default sweep writes the committed ``kernel_bench`` record —
+    smoke/custom/partial runs get their own file so a quick local run can
+    never clobber the measured numbers the ROADMAP cites."""
+    if not backends or backends == ["all"]:
+        backends = list(_DEFAULT_BACKENDS)
+        if jax.default_backend() == "tpu":
+            backends.insert(0, "pallas")
+    default_sweep = shapes is None and not smoke
+    if shapes is None:
+        shapes = {"smoke": _SMOKE_SHAPE} if smoke else dict(_SHAPES)
+    if smoke:
+        n_iter = 2
+    out = {"shapes": {}}
+    for label, (m, k, n) in shapes.items():
+        bl = [b for b in backends if b not in _SHAPE_SKIP.get(label, ())]
+        out["shapes"][label] = run_shape(bl, m, k, n, n_iter=n_iter)
+    if record is None:
+        record = ("kernel_bench" if default_sweep
+                  else "kernel_bench_smoke" if smoke else "kernel_bench_custom")
+    save_json(record, out)
     return out
 
 
@@ -105,9 +146,13 @@ if __name__ == "__main__":
     ap.add_argument("--backend", default="all",
                     help="'all' or comma list of dispatch backends "
                          "(xla,ref,pallas,pallas_interpret)")
-    ap.add_argument("--m", type=int, default=16)
+    ap.add_argument("--m", type=int, default=0,
+                    help="custom shape (with --k/--n); 0 -> default sweep")
     ap.add_argument("--k", type=int, default=768)
     ap.add_argument("--n", type=int, default=3072)
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny shape + minimal iterations (CI bench lane)")
     args = ap.parse_args()
+    shapes = {"custom": (args.m, args.k, args.n)} if args.m else None
     run([b.strip() for b in args.backend.split(",")],
-        m=args.m, k=args.k, n=args.n)
+        shapes=shapes, smoke=args.smoke)

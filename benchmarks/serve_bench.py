@@ -1,0 +1,120 @@
+"""Serving-path benchmark: TTFT and decode throughput per arch × prefill mode.
+
+For each architecture family the engine serves (full attention, RG-LRU,
+Mamba2 SSM, MoE — their cache-merge semantics all differ, so all four are
+exercised), measures on the reduced config:
+
+* ``ttft_ms``    — wall time from ``add_request`` through the first decode
+  step (compile cost excluded: a warmup engine populates the shared
+  per-arch executable caches first, which is the serving steady state).
+* ``decode_tok_s`` — steady-state decode throughput over ``--steps`` steps.
+* ``prefill_dispatches`` — compiled dispatches the prefill issued; the
+  bucketed path must stay at ``ceil(len / bucket_max)`` vs one per token.
+
+Both ``prefill_mode="token"`` (the legacy baseline) and ``"bucketed"`` (the
+chunked path) run, and the headline ``ttft_speedup`` ratios are recorded to
+``experiments/bench/serve_bench.json`` alongside the geomean.
+
+Run:  PYTHONPATH=src python -m benchmarks.serve_bench [--smoke]
+"""
+import argparse
+import time
+
+import jax
+import numpy as np
+
+from repro.configs import get_config
+from repro.models import init_params
+from repro.serving.engine import Engine, ServeConfig
+from benchmarks.common import emit, save_json
+
+ARCHS = [
+    ("attn", "qwen2-1.5b"),
+    ("rglru", "recurrentgemma-9b"),
+    ("ssm", "mamba2-1.3b"),
+    ("moe", "grok-1-314b"),
+]
+_MODES = ("token", "bucketed")
+
+
+def bench_arch(name, prompt_len, steps, slots, ctx):
+    arch = get_config(name).reduced()
+    params = init_params(jax.random.PRNGKey(0), arch)
+    prompt = [int(t) for t in
+              np.random.RandomState(0).randint(1, arch.vocab_size, prompt_len)]
+    res = {}
+    for mode in _MODES:
+        cfg = ServeConfig(batch_slots=slots, max_ctx=ctx, prefill_mode=mode)
+        # warm the shared per-arch executables (prefill buckets + decode)
+        warm = Engine(arch, params, cfg)
+        warm.add_request(prompt)
+        warm.step()
+
+        eng = Engine(arch, params, cfg)
+        t0 = time.perf_counter()
+        slot = eng.add_request(prompt)
+        first = eng.step()
+        ttft = time.perf_counter() - t0
+        assert slot in first
+        t0 = time.perf_counter()
+        for _ in range(steps):
+            eng.step()
+        decode_s = time.perf_counter() - t0
+        res[mode] = {
+            "ttft_ms": ttft * 1e3,
+            "prefill_dispatches": eng.stats["prefill_dispatches"],
+            "decode_tok_s": steps / decode_s,
+        }
+        emit(f"serve/{name}/{mode}", ttft * 1e6,
+             f"tok_s={steps / decode_s:.0f}"
+             f";dispatches={eng.stats['prefill_dispatches']}")
+    res["ttft_speedup"] = res["token"]["ttft_ms"] / res["bucketed"]["ttft_ms"]
+    return res
+
+
+def run(prompt_len=64, steps=32, slots=4, ctx=256, archs=None,
+        record="serve_bench"):
+    out = {
+        "params": {"prompt_len": prompt_len, "steps": steps, "slots": slots,
+                   "ctx": ctx},
+        "archs": {},
+    }
+    for label, name in (archs or ARCHS):
+        out["archs"][label] = {"config": name,
+                               **bench_arch(name, prompt_len, steps, slots,
+                                            ctx)}
+    ups = [a["ttft_speedup"] for a in out["archs"].values()]
+    out["ttft_speedup_geomean"] = float(np.exp(np.mean(np.log(ups))))
+
+    print(f"\n{'arch':<8} {'ttft token(ms)':>15} {'ttft bucketed(ms)':>18} "
+          f"{'speedup':>8} {'dispatches':>11} {'tok/s':>8}")
+    for label, a in out["archs"].items():
+        print(f"{label:<8} {a['token']['ttft_ms']:>15.1f} "
+              f"{a['bucketed']['ttft_ms']:>18.1f} "
+              f"{a['ttft_speedup']:>7.1f}x "
+              f"{a['token']['prefill_dispatches']:>4}->"
+              f"{a['bucketed']['prefill_dispatches']:<5} "
+              f"{a['bucketed']['decode_tok_s']:>8.0f}")
+    print(f"geomean TTFT speedup (bucketed vs token): "
+          f"{out['ttft_speedup_geomean']:.1f}x")
+    save_json(record, out)
+    return out
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--prompt-len", type=int, default=64)
+    ap.add_argument("--steps", type=int, default=32)
+    ap.add_argument("--slots", type=int, default=4)
+    ap.add_argument("--ctx", type=int, default=256)
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny sizes for the CI bench lane")
+    args = ap.parse_args()
+    if args.smoke:
+        # separate record: a smoke run must not clobber the committed
+        # full-size serve_bench.json the ROADMAP cites
+        run(prompt_len=12, steps=4, slots=2, ctx=64,
+            record="serve_bench_smoke")
+    else:
+        run(prompt_len=args.prompt_len, steps=args.steps, slots=args.slots,
+            ctx=args.ctx)

@@ -48,6 +48,11 @@ __all__ = ["BACKENDS", "resolve_backend", "grmac_matmul"]
 BACKENDS = ("auto", "xla", "pallas", "pallas_interpret", "ref")
 
 _ENV_VAR = "REPRO_GRMAC_BACKEND"
+# Opt-in bf16 values-einsum variant of the XLA backend (products exact when
+# the operand formats carry <= 8 significand bits between them; see
+# kernels/xla.py for the accumulation-order caveat). Read per call so tests
+# can monkeypatch the environment.
+_BF16_ENV = "REPRO_GRMAC_BF16_VALUES"
 
 
 def resolve_backend(backend: Optional[str] = None) -> str:
@@ -106,5 +111,6 @@ def grmac_matmul(
     xp = _pad_to(x, 1, n_r)
     wp = _pad_to(wq, 0, n_r)
     if b == "xla":
-        return grmac_matmul_xla(xp, wp, **kwargs)
+        bf16 = os.environ.get(_BF16_ENV, "0") not in ("", "0")
+        return grmac_matmul_xla(xp, wp, bf16_values=bf16, **kwargs)
     return grmac_matmul_ref(xp, wp, **kwargs)

@@ -21,6 +21,28 @@ vmap- and grad-safe (pure ``jnp``; gradients follow the usual
 straight-through convention of ``jnp.round``). Interpret-mode Pallas runs
 the same shapes ~3 orders of magnitude slower; ``benchmarks/kernel_bench.py
 --backend all`` measures the gap.
+
+bf16 values-einsum variant (``bf16_values=True``, reached via
+``REPRO_GRMAC_BF16_VALUES=1`` through ``dispatch.py``): the matmul operands
+carry very few significant bits — quantized inputs have ``n_man_x + 1`` and
+format-grid weights ``n_man_w + 1`` — so each elementwise *product* is
+exactly representable in bfloat16's 8 significand bits whenever
+``(n_man_x + 1) + (n_man_w + 1) <= 8`` (e.g. FP6_E3M2 × FP4_E2M1 = 5 bits).
+The values/gains einsums then run with bf16 operands and
+``preferred_element_type=float32``, which on MXU/tensor-core hardware hits
+the fast mixed-precision GEMM path at zero rounding cost in the multiply.
+Formats that don't satisfy the bound silently fall back to f32 operands, so
+the flag can never change numerics through the multiply itself.
+
+Accumulation-order caveat: the products are exact, but the f32 *sums* over
+each ``n_r`` block are only bit-identical to ``ref.py`` if XLA reduces both
+GEMMs in the same order. On CPU both lower to the same f32 GEMM (bf16
+operands are upcast first), so the cross-backend tests hold 0-ulp equality;
+on TPU/GPU the mixed-precision GEMM may tile its f32 accumulator
+differently at large K, where agreement degrades to last-ulp differences
+*before* ADC quantization (``adc_quantize`` snaps most of those away, but
+values that land on ADC decision boundaries can flip a code). The
+bit-exactness contract is therefore asserted on CPU only.
 """
 from __future__ import annotations
 
@@ -32,12 +54,23 @@ import jax.numpy as jnp
 from repro.core.formats import FPFormat, decompose, pow2i, quantize
 from repro.core.mac import adc_quantize
 
-__all__ = ["grmac_matmul_xla"]
+__all__ = ["grmac_matmul_xla", "bf16_products_exact"]
+
+
+def bf16_products_exact(fmt_x, fmt_w) -> bool:
+    """True when every x·w product fits bfloat16's 8 significand bits, so
+    the bf16 values-einsum variant is lossless (see module docstring)."""
+    nx = getattr(fmt_x, "n_man", None)
+    nw = getattr(fmt_w, "n_man", None)
+    if nx is None or nw is None:      # IntFormat operands: no such bound
+        return False
+    return (nx + 1) + (nw + 1) <= 8
 
 
 @functools.partial(
     jax.jit,
-    static_argnames=("fmt_x", "fmt_w", "n_r", "enob", "granularity"),
+    static_argnames=("fmt_x", "fmt_w", "n_r", "enob", "granularity",
+                     "bf16_values"),
 )
 def grmac_matmul_xla(
     x: jax.Array,
@@ -48,11 +81,14 @@ def grmac_matmul_xla(
     n_r: int = 32,
     enob: float = 8.0,
     granularity: str = "row",
+    bf16_values: bool = False,
 ) -> jax.Array:
     """(M, K) @ (K, N) GR-MAC matmul, fully vectorized; float32 out.
 
     Inputs pre-scaled to [-1, 1]; ``wq`` already on the weight format grid;
     ``K`` must be a multiple of ``n_r`` (dispatch.py pads).
+    ``bf16_values`` runs the block einsums with bf16 operands and an f32
+    accumulator when the formats make the products exact (no-op otherwise).
     """
     x = x.astype(jnp.float32)
     wq = wq.astype(jnp.float32)
@@ -61,13 +97,20 @@ def grmac_matmul_xla(
     assert k == k2 and k % n_r == 0
     b = k // n_r
 
+    op_dtype = (jnp.bfloat16 if bf16_values and bf16_products_exact(
+        fmt_x, fmt_w) else jnp.float32)
+
+    def block_einsum(a, bb):
+        return jnp.einsum("mbk,bkn->mbn", a.astype(op_dtype),
+                          bb.astype(op_dtype),
+                          preferred_element_type=jnp.float32)
+
     xq = quantize(x, fmt_x)
     xb = xq.reshape(m, b, n_r)
     wb = wq.reshape(b, n_r, n)
 
     if granularity == "conv":
-        num = jnp.einsum(
-            "mbk,bkn->mbn", xb, wb, preferred_element_type=jnp.float32)
+        num = block_einsum(xb, wb)
         z = adc_quantize(num * (1.0 / n_r), enob) * float(n_r)
         return jnp.sum(z, axis=1)
 
@@ -77,8 +120,7 @@ def grmac_matmul_xla(
     gxb = pow2i(ex).reshape(m, b, n_r)
 
     if granularity == "row":
-        num = jnp.einsum(
-            "mbk,bkn->mbn", xb, wb, preferred_element_type=jnp.float32)
+        num = block_einsum(xb, wb)
         den = jnp.sum(gxb, axis=-1)[:, :, None]          # (M, B, 1)
         scale = 2.0**fmt_x.e_max
         z = adc_quantize(num * scale / den, enob) * (den * (1.0 / scale))
@@ -87,10 +129,9 @@ def grmac_matmul_xla(
     if granularity == "unit":
         _, _, ew = decompose(wq, fmt_w)
         gwb = pow2i(ew).reshape(b, n_r, n)
-        num = jnp.einsum(
-            "mbk,bkn->mbn", xb, wb, preferred_element_type=jnp.float32)
-        den = jnp.einsum(
-            "mbk,bkn->mbn", gxb, gwb, preferred_element_type=jnp.float32)
+        num = block_einsum(xb, wb)
+        # gains are powers of two: their bf16 products are exact too
+        den = block_einsum(gxb, gwb)
         scale = 2.0 ** (fmt_x.e_max + fmt_w.e_max)
         z = adc_quantize(num * scale / den, enob) * (den * (1.0 / scale))
         return jnp.sum(z, axis=1)

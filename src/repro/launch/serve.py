@@ -1,11 +1,14 @@
 """Serving launcher: loads (or initializes) params and serves batched
-requests through the slot engine.
+requests through the slot engine (bucketed chunked prefill + on-device
+sampling by default; ``--prefill-mode token`` runs the legacy
+one-dispatch-per-token baseline for comparison).
 
 Usage:
     PYTHONPATH=src python -m repro.launch.serve --arch gemma3-1b --reduced \
         --tokens 32
 """
 import argparse
+import time
 
 import jax
 
@@ -22,6 +25,8 @@ def main():
     ap.add_argument("--tokens", type=int, default=32)
     ap.add_argument("--slots", type=int, default=4)
     ap.add_argument("--ctx", type=int, default=256)
+    ap.add_argument("--prefill-mode", default="bucketed",
+                    choices=["bucketed", "token"])
     args = ap.parse_args()
 
     arch = get_config(args.arch)
@@ -31,10 +36,18 @@ def main():
         arch = arch.replace(cim=arch.cim.with_mode(args.cim))
     params = init_params(jax.random.PRNGKey(0), arch)
     eng = Engine(arch, params, ServeConfig(batch_slots=args.slots,
-                                           max_ctx=args.ctx))
+                                           max_ctx=args.ctx,
+                                           prefill_mode=args.prefill_mode))
+    t0 = time.perf_counter()
     eng.add_request(list(range(1, 9)))
     eng.add_request(list(range(20, 24)))
-    for i in range(args.tokens):
+    out = eng.step()
+    print(f"TTFT (2 prompts, incl. compile): "
+          f"{(time.perf_counter() - t0) * 1e3:.1f} ms "
+          f"({eng.stats['prefill_dispatches']} prefill dispatches, "
+          f"mode={args.prefill_mode})")
+    print(f"step 0: {out}")
+    for i in range(1, args.tokens):
         out = eng.step()
         if i % 8 == 0:
             print(f"step {i}: {out}")

@@ -3,7 +3,9 @@ from repro.models.transformer import (
     forward,
     init_cache,
     init_params,
+    prefill_step,
     train_loss,
 )
 
-__all__ = ["init_params", "init_cache", "forward", "train_loss", "decode_step"]
+__all__ = ["init_params", "init_cache", "forward", "train_loss",
+           "decode_step", "prefill_step"]

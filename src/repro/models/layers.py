@@ -173,6 +173,72 @@ def _attn_mask(q_pos, k_pos, window: int, local: bool):
     return causal
 
 
+def _chunk_prefill_attention(q, k, v, x, cache, cache_index, chunk_lengths,
+                             cfg: ArchConfig, local: bool):
+    """Multi-token cached attention for bucketed prefill.
+
+    Writes the chunk's K/V at per-lane offsets ``cache_index + t`` and
+    attends each query causally, in one dispatch. Steps with
+    ``t >= chunk_lengths[b]`` (right padding, lanes not being prefilled)
+    are redirected out of bounds and dropped by the scatter, so those
+    lanes' caches pass through bitwise unchanged — no host-side merge.
+
+    For ring-buffer (local) caches only the last ``min(len, ring)`` valid
+    steps may write (earlier steps share ring residues with later ones and
+    scatter order over duplicates is unspecified); scores are taken against
+    the *pre-write* ring plus the in-flight chunk keys, because a chunk
+    longer than the window overwrites ring entries early queries still see.
+
+    Scoring goes through ``_attend_chunked`` with everything encoded as
+    positions, so the causal/window mask logic is shared with the train
+    path and score materialization stays bounded by ``cfg.attn_chunk``:
+    keys that must be invisible (never-written ring slots, padded chunk
+    steps) simply carry a position greater than every valid query's.
+    """
+    b, s = q.shape[0], q.shape[1]
+    s_ctx = cache["k"].shape[1]
+    idx = jnp.broadcast_to(jnp.asarray(cache_index), (b,))
+    lengths = jnp.broadcast_to(jnp.asarray(chunk_lengths), (b,))
+    steps = jnp.arange(s)
+    q_pos = idx[:, None] + steps[None, :]                        # (B, S)
+    step_valid = steps[None, :] < lengths[:, None]               # (B, S)
+
+    kc = k.astype(cache["k"].dtype)
+    vc = v.astype(cache["v"].dtype)
+    if local:
+        writer = step_valid & (steps[None, :] >= (lengths - s_ctx)[:, None])
+        tgt = jnp.where(writer, jnp.mod(q_pos, s_ctx), s_ctx)
+    else:
+        tgt = jnp.where(step_valid, q_pos, s_ctx)
+    upd = jax.vmap(lambda c, u, t: c.at[t].set(u, mode="drop"))
+    new_cache = {"k": upd(cache["k"], kc, tgt), "v": upd(cache["v"], vc, tgt)}
+
+    if local:
+        # positions held by the pre-chunk ring (last write was idx - 1);
+        # never-written slots resolve negative — push them past every query
+        # so the causal mask drops them. Padded chunk keys keep their
+        # over-length positions, which already exceed every valid query's;
+        # padded queries see garbage but their outputs never reach a cache.
+        slot = jnp.arange(s_ctx)[None, :]
+        last_old = idx - 1
+        age = jnp.mod(jnp.mod(last_old, s_ctx)[:, None] - slot, s_ctx)
+        k_pos_old = last_old[:, None] - age                      # (B, s_ctx)
+        k_pos_old = jnp.where(k_pos_old >= 0, k_pos_old, q_pos[:, -1:] + 1)
+        keys = jnp.concatenate([cache["k"], kc], axis=1).astype(x.dtype)
+        vals = jnp.concatenate([cache["v"], vc], axis=1).astype(x.dtype)
+        pos_k = jnp.concatenate([k_pos_old, q_pos], axis=1)
+    else:
+        # linear cache slot positions are their indices: slots above each
+        # query's position (later chunk steps, dropped padding, stale tail)
+        # are causally invisible by construction
+        keys = new_cache["k"].astype(x.dtype)
+        vals = new_cache["v"].astype(x.dtype)
+        pos_k = jnp.broadcast_to(jnp.arange(s_ctx)[None, :], (b, s_ctx))
+
+    out = _attend_chunked(q, keys, vals, q_pos, pos_k, cfg, local)
+    return out, new_cache
+
+
 def attention(
     p,
     x: jax.Array,
@@ -182,6 +248,7 @@ def attention(
     positions: jax.Array,
     cache: Optional[dict] = None,
     cache_index: Optional[jax.Array] = None,
+    chunk_lengths: Optional[jax.Array] = None,
 ):
     """GQA attention.
 
@@ -189,6 +256,10 @@ def attention(
     Decode path: ``cache`` = {"k","v"): (B, S_ctx, KV, Dh)} ring/linear
     buffer; ``cache_index`` (scalar) is the write position. Returns
     (out, new_cache).
+    Chunked-prefill path: ``cache`` plus ``chunk_lengths`` (B,) — S prompt
+    tokens are written at per-lane offsets ``cache_index + t`` and attended
+    causally in one pass; steps at ``t >= chunk_lengths`` (bucket padding,
+    untouched lanes) never reach the cache.
     """
     b, s, d = x.shape
     h, kv, dh = cfg.n_heads, cfg.n_kv_heads, cfg.d_head
@@ -204,6 +275,9 @@ def attention(
     if cache is None:
         out = _train_attention(q, k, v, positions, cfg, local)
         new_cache = None
+    elif chunk_lengths is not None:
+        out, new_cache = _chunk_prefill_attention(
+            q, k, v, x, cache, cache_index, chunk_lengths, cfg, local)
     else:
         # single-token decode: s == 1, write into the cache then attend.
         # ``cache_index`` may be a scalar or a per-sequence (B,) vector

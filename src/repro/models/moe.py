@@ -52,15 +52,33 @@ def init_moe(key, cfg: ArchConfig, dtype):
     return p
 
 
-def _dispatch_local(xf, expert_idx, e: int, cap: int):
-    """Group-local dispatch: (T, D), (T, k) -> buf (E, cap, D), slot, keep."""
+def _dispatch_local(xf, expert_idx, valid, e: int, cap: int):
+    """Group-local dispatch: (T, D), (T, k) -> buf (E, cap, D), slot, keep.
+
+    ``valid`` (T,) excludes tokens from routing entirely: they consume no
+    expert capacity and combine to zero. Chunked prefill routes right-padded
+    bucket rows through here; without the mask, padding would steal capacity
+    from real tokens and make bucketed prefill diverge from the
+    token-by-token path whenever an expert is near its cap.
+
+    Residual caveat (fixed-capacity MoE is shape-dependent by design): a
+    bucketed chunk pools one cap over all its real tokens, while the
+    token-by-token path gets a fresh per-call cap, so the two prefill modes
+    are only equivalent while no expert overflows its cap in either mode —
+    true for near-uniform routing at cap >= ceil(T·k/e·1.25), but a
+    heavily collapsed router can drop late prompt tokens in bucketed mode
+    that per-token dispatch would keep (and the single-token decode path
+    has no ``valid`` mask, so placeholder lanes there still take slots).
+    """
     t, d = xf.shape
     k = expert_idx.shape[-1]
     flat_expert = expert_idx.reshape(-1)                          # (T*k,)
+    flat_valid = jnp.repeat(valid, k)                             # (T*k,)
     eq = jax.nn.one_hot(flat_expert, e, dtype=jnp.int32)          # (T*k, E)
+    eq = eq * flat_valid[:, None].astype(jnp.int32)
     pos_in_e = (jnp.cumsum(eq, axis=0) - eq) * eq
     position = jnp.sum(pos_in_e, axis=-1)                         # (T*k,)
-    keep = position < cap
+    keep = (position < cap) & flat_valid
     slot = flat_expert * cap + jnp.minimum(position, cap - 1)
     src = jnp.repeat(xf, k, axis=0)
     buf = jnp.zeros((e * cap, d), xf.dtype).at[slot].add(
@@ -78,12 +96,18 @@ def _combine_local(out_buf, slot, keep, gates, k: int):
     return jnp.sum(weighted.reshape(t, k, d), axis=1)
 
 
-def moe(p, x: jax.Array, cfg: ArchConfig) -> Tuple[jax.Array, jax.Array]:
-    """Returns (output (B,S,D), aux load-balance loss scalar)."""
+def moe(p, x: jax.Array, cfg: ArchConfig,
+        valid: "jax.Array | None" = None) -> Tuple[jax.Array, jax.Array]:
+    """Returns (output (B,S,D), aux load-balance loss scalar).
+
+    ``valid`` (B, S) optionally marks real tokens; invalid ones are kept
+    out of expert capacity (see ``_dispatch_local``). ``None`` means all."""
     b, s, d = x.shape
     e, k = cfg.n_experts, cfg.top_k
     t = b * s
     xf = x.reshape(t, d)
+    vf = (jnp.ones((t,), bool) if valid is None
+          else valid.reshape(t).astype(bool))
 
     # --- routing (always f32 for numerics) ---
     logits = dense(p["router"], xf.astype(jnp.float32), cfg.cim, "expert")
@@ -106,15 +130,15 @@ def moe(p, x: jax.Array, cfg: ArchConfig) -> Tuple[jax.Array, jax.Array]:
     if grouped:
         cap = max(4, int(math.ceil(t / nb * k / e * cfg.capacity_factor)))
         disp = shard_map(
-            lambda xf_l, ei_l: _dispatch_local(xf_l, ei_l, e, cap),
+            lambda xf_l, ei_l, vf_l: _dispatch_local(xf_l, ei_l, vf_l, e, cap),
             mesh=mesh,
-            in_specs=(P(ba, None), P(ba, None)),
+            in_specs=(P(ba, None), P(ba, None), P(ba)),
             out_specs=(P(None, ba, None), P(ba), P(ba)),
         )
-        buf, slot, keep = disp(xf, expert_idx)
+        buf, slot, keep = disp(xf, expert_idx, vf)
     else:
         cap = max(4, int(math.ceil(t * k / e * cfg.capacity_factor)))
-        buf, slot, keep = _dispatch_local(xf, expert_idx, e, cap)
+        buf, slot, keep = _dispatch_local(xf, expert_idx, vf, e, cap)
 
     # EP over "model" when E divides it; otherwise intra-expert TP with the
     # hidden dim over "model" (grok: 8 experts @ 16-way TP).

@@ -6,7 +6,10 @@
     out = W_o h_t
 
 preceded by a width-``conv_width`` causal depthwise conv on the x branch.
-Train path uses an associative scan over time; decode is the recurrence.
+Train path uses an associative scan over time; decode is the recurrence;
+prefill (``rglru_prefill``) runs the decode recurrence over a whole prompt
+chunk inside one ``lax.scan`` so a bucketed prefill stays numerically on
+top of the token-by-token path (same per-step elementwise math).
 """
 from __future__ import annotations
 
@@ -21,7 +24,8 @@ from repro.models.layers import dense, init_dense
 from repro.models.ssm import _causal_conv
 from repro.parallel.sharding import shard
 
-__all__ = ["init_rglru", "rglru_train", "rglru_decode", "init_rglru_state"]
+__all__ = ["init_rglru", "rglru_train", "rglru_decode", "rglru_prefill",
+           "init_rglru_state"]
 
 _C = 8.0
 
@@ -77,20 +81,63 @@ def rglru_train(p, u: jax.Array, cfg: ArchConfig) -> jax.Array:
     return dense(p["out_proj"], h, cfg.cim, "qkvo")
 
 
+def _recurrence_step(kernel, h, win, x_t, i_t, log_a_t):
+    """One RG-LRU time step from (h, conv window) — the single source of
+    the per-token update shared by decode and prefill, so the bucketed
+    prefill's bitwise-equivalence contract can't drift from the decode
+    math. x_t/i_t/log_a_t: (B, W) slices. Returns (h_new, win_new)."""
+    win_full = jnp.concatenate([win, x_t[:, None, :].astype(win.dtype)],
+                               axis=1)
+    xc = jnp.sum(win_full * kernel[None, :, :], axis=1)          # (B, W)
+    a = jnp.exp(log_a_t)
+    h_new = a * h + jnp.sqrt(jnp.maximum(1.0 - a * a, 1e-9)) * (i_t * xc)
+    return h_new, win_full[:, 1:, :]
+
+
 def rglru_decode(
     p, u: jax.Array, cfg: ArchConfig, state: dict
 ) -> Tuple[jax.Array, dict]:
     b, s, d = u.shape
     assert s == 1
     x, i, log_a = _branches(p, u, cfg)
-    win = jnp.concatenate([state["conv"], x.astype(state["conv"].dtype)], axis=1)
     kernel = p["conv"].astype(jnp.float32)
-    xc = jnp.sum(win * kernel[None, :, :], axis=1)               # (B, W)
-    new_conv = win[:, 1:, :]
-    a = jnp.exp(log_a[:, 0, :])
-    h_new = a * state["h"] + jnp.sqrt(jnp.maximum(1.0 - a * a, 1e-9)) * (
-        i[:, 0, :] * xc
-    )
+    h_new, new_conv = _recurrence_step(
+        kernel, state["h"], state["conv"], x[:, 0, :], i[:, 0, :],
+        log_a[:, 0, :])
     out = dense(p["out_proj"], h_new[:, None, :].astype(u.dtype),
                 cfg.cim, "qkvo")
     return out, {"h": h_new, "conv": new_conv}
+
+
+def rglru_prefill(
+    p, u: jax.Array, cfg: ArchConfig, state: dict, length: jax.Array
+) -> Tuple[jax.Array, dict]:
+    """Chunked prefill: the decode recurrence over u (B, S, D) in one pass.
+
+    ``length`` (B,) counts the valid leading tokens per lane; steps at
+    ``t >= length`` are identity updates (state and conv window frozen), so
+    right-padded buckets and untouched lanes (length 0) leave ``state``
+    bitwise unchanged. Each step is ``_recurrence_step`` — the same op
+    sequence as ``rglru_decode`` — driven by ``lax.scan`` instead of one
+    dispatch per token.
+    """
+    b, s, d = u.shape
+    x, i, log_a = _branches(p, u, cfg)
+    kernel = p["conv"].astype(jnp.float32)
+    valid = jnp.arange(s)[None, :] < length[:, None]             # (B, S)
+
+    def step(carry, t_in):
+        h, win = carry
+        x_t, i_t, la_t, v_t = t_in
+        h_new, win_new = _recurrence_step(kernel, h, win, x_t, i_t, la_t)
+        h_new = jnp.where(v_t[:, None], h_new, h)
+        win_new = jnp.where(v_t[:, None, None], win_new, win)
+        return (h_new, win_new), h_new
+
+    xs = (jnp.moveaxis(x, 1, 0), jnp.moveaxis(i, 1, 0),
+          jnp.moveaxis(log_a, 1, 0), jnp.moveaxis(valid, 1, 0))
+    (h_last, win_last), h_seq = jax.lax.scan(
+        step, (state["h"], state["conv"]), xs)
+    h_seq = jnp.moveaxis(h_seq, 0, 1).astype(u.dtype)            # (B, S, W)
+    out = dense(p["out_proj"], h_seq, cfg.cim, "qkvo")
+    return out, {"h": h_last, "conv": win_last}

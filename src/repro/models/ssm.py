@@ -22,7 +22,8 @@ from repro.configs.base import ArchConfig
 from repro.models.layers import dense, init_dense, init_rmsnorm, rmsnorm
 from repro.parallel.sharding import shard
 
-__all__ = ["init_ssm", "ssm_train", "ssm_decode", "init_ssm_state"]
+__all__ = ["init_ssm", "ssm_train", "ssm_decode", "ssm_prefill",
+           "init_ssm_state"]
 
 
 def init_ssm(key, cfg: ArchConfig, dtype):
@@ -149,30 +150,81 @@ def ssm_train(p, u: jax.Array, cfg: ArchConfig) -> jax.Array:
     return dense(p["out_proj"], y, cfg.cim, "qkvo")
 
 
+def _recurrence_step(p, cfg: ArchConfig, kernel, a_rate,
+                     h, win, x_t, b_t, c_t, dt_t):
+    """One SSD time step from (h, conv window) — the single source of the
+    per-token update shared by decode and prefill, so the bucketed
+    prefill's bitwise-equivalence contract can't drift from the decode
+    math. x_t (B, di), b_t/c_t (B, N), dt_t (B, NH).
+    Returns (h_new, win_new, y) with y (B, NH, P) pre-gate/-norm."""
+    b = x_t.shape[0]
+    nh, hd = cfg.ssm_heads, cfg.ssm_headdim
+    win_full = jnp.concatenate([win, x_t[:, None, :].astype(win.dtype)],
+                               axis=1)
+    xc = jnp.sum(win_full * kernel[None, :, :], axis=1)          # (B, di)
+    xh = jax.nn.silu(xc).reshape(b, nh, hd).astype(jnp.float32)
+    a = jnp.exp(-dt_t * a_rate)                                  # (B, NH)
+    dbx = jnp.einsum("bh,bn,bhp->bhnp", dt_t, b_t, xh)
+    h_new = a[..., None, None] * h + dbx
+    y = jnp.einsum("bn,bhnp->bhp", c_t, h_new)
+    y = y + p["D"][None, :, None] * xh
+    return h_new, win_full[:, 1:, :], y
+
+
 def ssm_decode(
     p, u: jax.Array, cfg: ArchConfig, state: dict
 ) -> Tuple[jax.Array, dict]:
     """One-token recurrence. u: (B,1,D); state: {"h","conv"}."""
     b, s, d = u.shape
     assert s == 1
-    di, n, nh, hd = cfg.d_inner, cfg.ssm_state, cfg.ssm_heads, cfg.ssm_headdim
+    di = cfg.d_inner
 
     z, x, bmat, cmat, dt = _project(p, u, cfg)
-    # causal conv over the rolling window
-    win = jnp.concatenate([state["conv"], x.astype(state["conv"].dtype)], axis=1)
     kernel = p["conv"].astype(jnp.float32)
-    xc = jnp.sum(win * kernel[None, :, :], axis=1, keepdims=True)
-    new_conv = win[:, 1:, :]
-    xs = jax.nn.silu(xc)
-    xh = xs.reshape(b, nh, hd).astype(jnp.float32)
-
     a_rate = jnp.exp(p["A_log"])[None, :]
-    a = jnp.exp(-dt[:, 0, :] * a_rate)                           # (B,NH)
-    dbx = jnp.einsum("bh,bn,bhp->bhnp", dt[:, 0, :], bmat[:, 0, :], xh)
-    h_new = a[..., None, None] * state["h"] + dbx
-    y = jnp.einsum("bn,bhnp->bhp", cmat[:, 0, :], h_new)
-    y = y + p["D"][None, :, None] * xh
+    h_new, new_conv, y = _recurrence_step(
+        p, cfg, kernel, a_rate, state["h"], state["conv"],
+        x[:, 0, :], bmat[:, 0, :], cmat[:, 0, :], dt[:, 0, :])
     y = y.reshape(b, 1, di).astype(u.dtype)
     y = rmsnorm(p["out_norm"], y * jax.nn.silu(z))
     out = dense(p["out_proj"], y, cfg.cim, "qkvo")
     return out, {"h": h_new, "conv": new_conv}
+
+
+def ssm_prefill(
+    p, u: jax.Array, cfg: ArchConfig, state: dict, length: jax.Array
+) -> Tuple[jax.Array, dict]:
+    """Chunked prefill: the decode recurrence over u (B, S, D) in one pass.
+
+    Unlike ``ssm_train`` (the chunked-parallel SSD dual form, whose f32
+    accumulation order drifts from the recurrence), this scans
+    ``_recurrence_step`` — the same op sequence as ``ssm_decode`` — so a
+    bucketed prefill reproduces the token-by-token cache trajectory.
+    ``length`` (B,) counts valid leading tokens per lane; steps at
+    ``t >= length`` freeze both the SSM state and the conv window bitwise.
+    """
+    b, s, d = u.shape
+    di = cfg.d_inner
+    z, x, bmat, cmat, dt = _project(p, u, cfg)
+    kernel = p["conv"].astype(jnp.float32)
+    a_rate = jnp.exp(p["A_log"])[None, :]
+    valid = jnp.arange(s)[None, :] < length[:, None]             # (B, S)
+
+    def step(carry, t_in):
+        h, win = carry
+        x_t, b_t, c_t, dt_t, v_t = t_in
+        h_new, win_new, y = _recurrence_step(
+            p, cfg, kernel, a_rate, h, win, x_t, b_t, c_t, dt_t)
+        h_new = jnp.where(v_t[:, None, None, None], h_new, h)
+        win_new = jnp.where(v_t[:, None, None], win_new, win)
+        return (h_new, win_new), y
+
+    xs = (jnp.moveaxis(x, 1, 0), jnp.moveaxis(bmat, 1, 0),
+          jnp.moveaxis(cmat, 1, 0), jnp.moveaxis(dt, 1, 0),
+          jnp.moveaxis(valid, 1, 0))
+    (h_last, win_last), y_seq = jax.lax.scan(
+        step, (state["h"], state["conv"]), xs)
+    y = jnp.moveaxis(y_seq, 0, 1).reshape(b, s, di).astype(u.dtype)
+    y = rmsnorm(p["out_norm"], y * jax.nn.silu(z))
+    out = dense(p["out_proj"], y, cfg.cim, "qkvo")
+    return out, {"h": h_last, "conv": win_last}

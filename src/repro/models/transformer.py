@@ -6,9 +6,12 @@ Full super-blocks are scanned (``jax.lax.scan`` over stacked params) so the
 lowered HLO is O(pattern period), not O(depth) — essential for compiling
 512-way-sharded 35..64-layer models; remainder layers run unrolled.
 
-Two execution paths share the layer code:
-  train/prefill  full-sequence, no caches
-  decode         single token against per-layer caches/states
+Three execution paths share the layer code:
+  train            full-sequence, no caches
+  chunked prefill  full prompt chunk against per-layer caches/states, KV and
+                   recurrent state written at per-lane offsets in one
+                   dispatch (``prefill_step``; right-padding masked out)
+  decode           single token against per-layer caches/states
 """
 from __future__ import annotations
 
@@ -21,8 +24,10 @@ import jax.numpy as jnp
 from repro.configs.base import ArchConfig
 from repro.models import layers as L
 from repro.models.moe import init_moe, moe
-from repro.models.rglru import init_rglru, init_rglru_state, rglru_decode, rglru_train
-from repro.models.ssm import init_ssm, init_ssm_state, ssm_decode, ssm_train
+from repro.models.rglru import (
+    init_rglru, init_rglru_state, rglru_decode, rglru_prefill, rglru_train)
+from repro.models.ssm import (
+    init_ssm, init_ssm_state, ssm_decode, ssm_prefill, ssm_train)
 from repro.parallel.sharding import shard
 
 __all__ = [
@@ -31,6 +36,7 @@ __all__ = [
     "forward",
     "train_loss",
     "decode_step",
+    "prefill_step",
 ]
 
 
@@ -145,37 +151,51 @@ def _apply_layer(
     positions: jax.Array,
     cache: Optional[dict],
     cache_index,
+    chunk_lengths=None,
 ) -> Tuple[jax.Array, jax.Array, Optional[dict]]:
-    """Pre-norm residual block. Returns (x, aux_loss, new_cache)."""
+    """Pre-norm residual block. Returns (x, aux_loss, new_cache).
+
+    ``chunk_lengths`` (B,) switches cached execution from single-token
+    decode to chunked prefill: per-lane counts of valid leading tokens in
+    the S axis (padding/untouched lanes frozen)."""
     aux = jnp.zeros((), jnp.float32)
     h = L.rmsnorm(p["norm1"], x)
     new_cache = None
+    valid = None
+    if chunk_lengths is not None and cfg.is_moe:
+        valid = jnp.arange(x.shape[1])[None, :] < chunk_lengths[:, None]
     if kind in ("attn", "local"):
         out, new_cache = L.attention(
             p["attn"], h, cfg, local=(kind == "local"), positions=positions,
-            cache=cache, cache_index=cache_index)
+            cache=cache, cache_index=cache_index, chunk_lengths=chunk_lengths)
         x = x + out
         h2 = L.rmsnorm(p["norm2"], x)
         if cfg.is_moe:
-            out2, aux = moe(p["moe"], h2, cfg)
+            out2, aux = moe(p["moe"], h2, cfg, valid=valid)
         else:
             out2 = L.mlp(p["ffn"], h2, cfg)
         x = x + out2
     elif kind == "rglru":
         if cache is None:
             out = rglru_train(p["rglru"], h, cfg)
+        elif chunk_lengths is not None:
+            out, new_cache = rglru_prefill(p["rglru"], h, cfg, cache,
+                                           chunk_lengths)
         else:
             out, new_cache = rglru_decode(p["rglru"], h, cfg, cache)
         x = x + out
         h2 = L.rmsnorm(p["norm2"], x)
         if cfg.is_moe:
-            out2, aux = moe(p["moe"], h2, cfg)
+            out2, aux = moe(p["moe"], h2, cfg, valid=valid)
         else:
             out2 = L.mlp(p["ffn"], h2, cfg)
         x = x + out2
     elif kind == "ssm":
         if cache is None:
             out = ssm_train(p["ssm"], h, cfg)
+        elif chunk_lengths is not None:
+            out, new_cache = ssm_prefill(p["ssm"], h, cfg, cache,
+                                         chunk_lengths)
         else:
             out, new_cache = ssm_decode(p["ssm"], h, cfg, cache)
         x = x + out
@@ -184,14 +204,16 @@ def _apply_layer(
     return x, aux, new_cache
 
 
-def _apply_superblock(p_sb, x, cfg, positions, cache_sb, cache_index):
+def _apply_superblock(p_sb, x, cfg, positions, cache_sb, cache_index,
+                      chunk_lengths=None):
     aux_total = jnp.zeros((), jnp.float32)
     new_caches = {} if cache_sb is not None else None
     for i, kind in enumerate(cfg.block_pattern):
         name = f"b{i}_{kind}"
         c = cache_sb[name] if cache_sb is not None else None
         x, aux, nc = _apply_layer(
-            kind, p_sb[name], x, cfg, positions, c, cache_index)
+            kind, p_sb[name], x, cfg, positions, c, cache_index,
+            chunk_lengths)
         aux_total = aux_total + aux
         if new_caches is not None:
             new_caches[name] = nc
@@ -207,11 +229,14 @@ def forward(
     cache: Optional[dict] = None,
     cache_index=None,
     positions: Optional[jax.Array] = None,
+    chunk_lengths: Optional[jax.Array] = None,
 ):
     """Returns (logits, aux_loss, new_cache).
 
     ``inputs``: int32 token ids (B, S) — or f32/bf16 embeddings (B, S, D)
     when ``cfg.input_mode == "embeddings"`` (modality-stub archs).
+    ``chunk_lengths`` (B,) turns a cached call into a chunked prefill over
+    the whole S axis (see ``prefill_step``).
     """
     if cfg.input_mode == "tokens":
         x = params["embed"][inputs].astype(_dtype(cfg))
@@ -224,9 +249,9 @@ def forward(
         if cache is None:
             positions = jnp.broadcast_to(jnp.arange(s), (b, s))
         else:
-            # scalar or per-sequence (B,) decode index
+            # scalar or per-sequence (B,) decode/prefill offset
             idx = jnp.broadcast_to(jnp.asarray(cache_index), (b,))
-            positions = idx[:, None]
+            positions = idx[:, None] + jnp.arange(s)[None, :]
 
     aux_total = jnp.zeros((), jnp.float32)
     new_cache: dict = {}
@@ -265,7 +290,7 @@ def forward(
                 p_sb = jax.tree.map(lambda a: a[i], p_stack)
                 c_sb = jax.tree.map(lambda a: a[i], c_stack)
                 x, aux_sb, nc = _apply_superblock(
-                    p_sb, x, cfg, positions, c_sb, cache_index)
+                    p_sb, x, cfg, positions, c_sb, cache_index, chunk_lengths)
                 aux_total = aux_total + aux_sb
                 ncs.append(nc)
             new_cache["superblocks"] = jax.tree.map(
@@ -277,7 +302,7 @@ def forward(
                 x, aux = carry
                 p_sb, c_sb = inp
                 xo, aux_sb, nc = _apply_superblock(
-                    p_sb, x, cfg, positions, c_sb, cache_index)
+                    p_sb, x, cfg, positions, c_sb, cache_index, chunk_lengths)
                 return (xo, aux + aux_sb), nc
 
             (x, aux_total), nc_stack = jax.lax.scan(
@@ -290,7 +315,7 @@ def forward(
             kind = name.split("_", 1)[1]
             c = cache["tail"][name] if cache is not None else None
             x, aux, nc = _apply_layer(
-                kind, p_l, x, cfg, positions, c, cache_index)
+                kind, p_l, x, cfg, positions, c, cache_index, chunk_lengths)
             aux_total = aux_total + aux
             new_tail[name] = nc
         if cache is not None:
@@ -336,3 +361,29 @@ def decode_step(params, token, cfg: ArchConfig, cache, cache_index):
     logits, _, new_cache = forward(
         params, token, cfg, cache=cache, cache_index=cache_index)
     return logits[:, -1, :], new_cache
+
+
+def prefill_step(params, tokens, cfg: ArchConfig, cache, cache_index, length):
+    """Chunked prefill: tokens (B, S) [or (B, S, D) embeddings] -> the
+    logits at each lane's last valid token, (B, V), plus the new cache.
+
+    ``cache_index`` (scalar or (B,)) is each lane's write offset; ``length``
+    (B,) counts the valid leading tokens of this chunk per lane — the S axis
+    may be right-padded to a compile-cache-friendly bucket. A lane with
+    ``length == 0`` passes through completely frozen: its KV cache,
+    recurrent states and conv windows come back bitwise unchanged, so the
+    serving engine prefills one slot of a live batch without any host-side
+    cache merging. One compiled dispatch replaces ``length`` token-by-token
+    decode dispatches; attention runs chunk-parallel while RG-LRU/SSM states
+    advance under an in-graph ``lax.scan`` of the exact decode recurrence.
+    """
+    b, s = tokens.shape[0], tokens.shape[1]
+    idx = jnp.broadcast_to(jnp.asarray(cache_index), (b,))
+    length = jnp.broadcast_to(jnp.asarray(length), (b,))
+    positions = idx[:, None] + jnp.arange(s)[None, :]
+    logits, _, new_cache = forward(
+        params, tokens, cfg, cache=cache, cache_index=idx,
+        positions=positions, chunk_lengths=length)
+    last = jnp.clip(length - 1, 0, s - 1)
+    last_logits = jnp.take_along_axis(logits, last[:, None, None], axis=1)
+    return last_logits[:, 0, :], new_cache

@@ -1,13 +1,25 @@
 """Batched serving engine: slot-based continuous batching over a fixed-size
-decode batch, with prefill, per-slot lengths, and greedy/temperature
-sampling. The decode step is a single jit'd function over the whole batch
-(caches included), so the engine maps directly onto the sharded serve_step
-that the multi-pod dry-run lowers.
+decode batch with chunked, length-bucketed prefill and on-device sampling.
+
+Prefill (``add_request``) pads each prompt chunk to a power-of-two bucket
+and runs it through ``models.prefill_step`` — one compiled dispatch per
+bucket (so O(ceil(len/bucket_max)) dispatches per prompt, vs one per token
+in the legacy ``prefill_mode="token"`` path), with the compile cache
+bounded by the O(log max_ctx) distinct bucket lengths per arch. Lanes not
+being prefilled are frozen inside the dispatch (length 0), so no host-side
+cache merging happens on the prefill path at all.
+
+Decode (``step``) is a single jit'd function over the whole batch that also
+performs the per-lane cache merge *and* token selection (greedy argmax or
+temperature-categorical) on device: logits never leave the device — the
+host sees exactly one device→host transfer of a ``(batch_slots,)`` int32
+array of sampled ids per step.
 
 Per-token CIM energy accounting: when the arch config has the GR-CIM path
 enabled, ``energy_report`` walks the model dims and prices every projection
 matmul with the paper's cost model (fJ/Op) — the deployment metric the
-paper optimizes.
+paper optimizes. The underlying DSE Monte-Carlo solve is memoized per
+design point.
 """
 from __future__ import annotations
 
@@ -21,24 +33,9 @@ import numpy as np
 
 from repro.configs.base import ArchConfig
 from repro.core.dse import evaluate_point
-from repro.models import decode_step, forward, init_cache
+from repro.models import decode_step, init_cache, prefill_step
 
 __all__ = ["ServeConfig", "Engine", "energy_report"]
-
-
-@functools.lru_cache(maxsize=32)
-def _decode_fn(arch: ArchConfig):
-    """One compiled decode executable per arch, shared by every Engine.
-
-    Compiling the identical decode HLO once per Engine instance (a fresh
-    ``jax.jit(lambda ...)`` each time) lets XLA autotune each copy
-    independently; on CPU that can pick different reduction strategies for
-    different compilations of the *same* program, and a last-ulp logits
-    difference flips greedy argmax near ties. Sharing the executable makes
-    every engine for a given arch bitwise-consistent (and drops the
-    per-engine compile cost).
-    """
-    return jax.jit(lambda p, t, c, i: decode_step(p, t, arch, c, i))
 
 
 def _merge_cache(old, new, mask):
@@ -63,6 +60,42 @@ def _merge_cache(old, new, mask):
     return out
 
 
+@functools.lru_cache(maxsize=64)
+def _decode_fn(arch: ArchConfig, sample: bool):
+    """One compiled decode executable per (arch, sampling mode), shared by
+    every Engine.
+
+    Sharing (rather than one ``jax.jit`` per Engine) keeps every engine for
+    a given arch bitwise-consistent — XLA autotunes each compilation of the
+    same HLO independently and a last-ulp logits difference flips greedy
+    argmax near ties. The executable fuses the whole per-step hot path:
+    decode forward, per-lane active-mask cache merge, and token selection
+    (argmax, or per-lane temperature categorical when ``sample``), so
+    logits and caches never cross the device boundary.
+    """
+    def fn(params, toks, cache, lengths, active, key, temp):
+        logits, new_cache = decode_step(params, toks, arch, cache, lengths)
+        merged = _merge_cache(cache, new_cache, active)
+        if sample:
+            keys = jax.random.split(key, logits.shape[0])
+            nxt = jax.vmap(
+                lambda k, lg: jax.random.categorical(k, lg / temp))(
+                    keys, logits)
+        else:
+            nxt = jnp.argmax(logits, axis=-1)
+        return nxt.astype(jnp.int32), merged
+
+    return jax.jit(fn)
+
+
+@functools.lru_cache(maxsize=256)
+def _prefill_fn(arch: ArchConfig, bucket: int):
+    """One compiled chunked-prefill executable per (arch, bucket length),
+    shared by every Engine. Buckets are powers of two (see
+    ``Engine._bucket``), so the cache stays O(log max_ctx) per arch."""
+    return jax.jit(lambda p, t, c, i, l: prefill_step(p, t, arch, c, i, l))
+
+
 @dataclasses.dataclass
 class ServeConfig:
     batch_slots: int = 8
@@ -72,6 +105,12 @@ class ServeConfig:
     # GR-MAC backend override for CIM-enabled archs (None keeps the arch's
     # CIMConfig.backend; see kernels.dispatch for the choices)
     cim_backend: Optional[str] = None
+    # "bucketed": chunked prefill, prompts padded to power-of-two buckets
+    # (the default); "token": legacy one-dispatch-per-token prefill, kept
+    # as the equivalence oracle for tests/benchmarks
+    prefill_mode: str = "bucketed"
+    prefill_bucket_min: int = 8
+    prefill_bucket_max: int = 1024
 
 
 class Engine:
@@ -87,7 +126,9 @@ class Engine:
         self.lengths = np.zeros(cfg.batch_slots, np.int32)
         self.active = np.zeros(cfg.batch_slots, bool)
         self.tokens: List[List[int]] = [[] for _ in range(cfg.batch_slots)]
-        self._decode = _decode_fn(self.arch)
+        # last emitted token per lane, fed back as next decode input
+        self._last_host = np.zeros(cfg.batch_slots, np.int32)
+        self.stats = {"prefill_dispatches": 0, "decode_steps": 0}
 
     @staticmethod
     def _snapshot(host_state: np.ndarray) -> jax.Array:
@@ -104,7 +145,24 @@ class Engine:
 
     # ------------------------------------------------------------ prefill
     def add_request(self, prompt: List[int]) -> int:
-        """Prefill a free slot token-by-token; returns slot id."""
+        """Prefill a free slot and return its id.
+
+        Bucketed mode splits the prompt into ``prefill_bucket_max``-sized
+        chunks, pads the remainder up to a power of two, and issues one
+        compiled dispatch per chunk — ``ceil(len / bucket_max)`` dispatches
+        (never more than ``ceil(log2(len)) + 1`` for prompts that fit the
+        context), vs ``len`` in legacy ``prefill_mode="token"``.
+        """
+        if not prompt:
+            raise ValueError("empty prompt")
+        if len(prompt) >= self.cfg.max_ctx:
+            # strictly less: the first decode step writes the re-fed last
+            # prompt token at position len(prompt), which must still be a
+            # valid cache index (at len == max_ctx it would clamp onto the
+            # last prompt entry and corrupt the lane)
+            raise ValueError(
+                f"prompt of {len(prompt)} tokens needs max_ctx > "
+                f"{len(prompt)} (got {self.cfg.max_ctx}) to decode")
         free = np.where(~self.active)[0]
         if len(free) == 0:
             raise RuntimeError("no free slots")
@@ -112,60 +170,101 @@ class Engine:
         self.tokens[slot] = list(prompt)
         self.lengths[slot] = 0
         self.active[slot] = True
-        for t in prompt:
-            self._advance_slot(slot, t)
+        if self.cfg.prefill_mode == "token":
+            for t in prompt:
+                self._advance_slot(slot, t)
+        else:
+            pos = 0
+            while pos < len(prompt):
+                chunk = prompt[pos:pos + self.cfg.prefill_bucket_max]
+                self._prefill_chunk(slot, chunk)
+                pos += len(chunk)
+        self._last_host[slot] = prompt[-1]
         return slot
 
+    def _bucket(self, n: int) -> int:
+        b = self.cfg.prefill_bucket_min
+        while b < n:
+            b *= 2
+        return b
+
+    def _prefill_chunk(self, slot: int, chunk: List[int]):
+        """One bucketed prefill dispatch: the chunk is right-padded to its
+        bucket and every other lane rides along frozen (length 0), so the
+        returned cache is adopted wholesale — no merge."""
+        bucket = self._bucket(len(chunk))
+        toks = np.zeros((self.cfg.batch_slots, bucket), np.int32)
+        toks[slot, :len(chunk)] = chunk
+        lens = np.zeros(self.cfg.batch_slots, np.int32)
+        lens[slot] = len(chunk)
+        fill = _prefill_fn(self.arch, bucket)
+        _, self.cache = fill(
+            self.params, jnp.asarray(toks), self.cache,
+            self._snapshot(self.lengths), jnp.asarray(lens))
+        self.lengths[slot] += len(chunk)
+        self.stats["prefill_dispatches"] += 1
+
     def _advance_slot(self, slot: int, token: int):
-        # Single-slot update via a batched call with per-slot indices.
-        # Other lanes write a placeholder at their own *frozen* position;
-        # because their length counter does not move, their next real
-        # token overwrites the same slot — no cache merging needed (and
-        # merging is a trap: stacked superblock caches carry the batch on
-        # axis 1, not axis 0).
+        # Legacy token-by-token prefill: a batched decode call with per-slot
+        # indices, all lanes but ``slot`` masked out of the cache merge.
         toks = np.zeros((self.cfg.batch_slots, 1), np.int32)
         toks[slot, 0] = token
-        logits, new_cache = self._decode(
+        mask = np.zeros(self.cfg.batch_slots, bool)
+        mask[slot] = True
+        _, self.cache = _decode_fn(self.arch, False)(
             self.params, jnp.asarray(toks), self.cache,
-            self._snapshot(self.lengths))
-        mask = jnp.zeros(self.cfg.batch_slots, bool).at[slot].set(True)
-        self.cache = _merge_cache(self.cache, new_cache, mask)
+            self._snapshot(self.lengths), jnp.asarray(mask),
+            jax.random.PRNGKey(0), 1.0)
         self.lengths[slot] += 1
-        self._last_logits = logits
+        self.stats["prefill_dispatches"] += 1
 
     # ------------------------------------------------------------ decode
     def step(self, key: Optional[jax.Array] = None) -> dict:
-        """One decode step for every active slot."""
+        """One decode step for every active slot.
+
+        The compiled decode returns only the sampled token ids; everything
+        else (logits, cache merge, sampling) stays on device. Pass ``key``
+        (and set ``temperature > 0``) for per-lane categorical sampling;
+        greedy argmax otherwise.
+        """
         if not self.active.any():
             return {}
-        toks = np.zeros((self.cfg.batch_slots, 1), np.int32)
-        for s in range(self.cfg.batch_slots):
-            if self.active[s] and self.tokens[s]:
-                toks[s, 0] = self.tokens[s][-1]
-        # per-slot decode indices: true continuous batching — slots at
-        # different generation lengths write/attend at their own positions
-        logits, new_cache = self._decode(
-            self.params, jnp.asarray(toks), self.cache,
-            self._snapshot(self.lengths))
-        self.cache = _merge_cache(
-            self.cache, new_cache, self._snapshot(self.active))
+        sample = self.cfg.temperature > 0 and key is not None
+        fn = _decode_fn(self.arch, sample)
+        ids_dev, self.cache = fn(
+            self.params, self._snapshot(self._last_host[:, None]),
+            self.cache, self._snapshot(self.lengths),
+            self._snapshot(self.active),
+            key if key is not None else jax.random.PRNGKey(0),
+            float(self.cfg.temperature) if sample else 1.0)
+        ids = self._fetch(ids_dev)
+        act = np.where(self.active)[0]
         out = {}
-        for s in range(self.cfg.batch_slots):
-            if not self.active[s]:
-                continue  # inactive lanes wrote at their own (frozen) index
-            lg = logits[s]
-            if self.cfg.temperature > 0 and key is not None:
-                key, sub = jax.random.split(key)
-                nxt = int(jax.random.categorical(
-                    sub, lg / self.cfg.temperature))
-            else:
-                nxt = int(jnp.argmax(lg))
-            self.tokens[s].append(nxt)
-            self.lengths[s] += 1
-            out[s] = nxt
-            if self.lengths[s] >= self.cfg.max_ctx:
-                self.active[s] = False
+        for s in act:
+            t = int(ids[s])
+            self.tokens[s].append(t)
+            out[int(s)] = t
+        self._last_host[act] = ids[act]
+        self.lengths[act] += 1
+        self.active[self.lengths >= self.cfg.max_ctx] = False
+        self.stats["decode_steps"] += 1
         return out
+
+    @staticmethod
+    def _fetch(ids_dev: jax.Array) -> np.ndarray:
+        """The single device→host transfer per decode step: the sampled
+        (batch_slots,) int32 token ids."""
+        return np.asarray(ids_dev)
+
+
+@functools.lru_cache(maxsize=64)
+def _energy_point(fmt_x, fmt_w, n_r, n_cols):
+    """Memoized ``evaluate_point``: the required-ENOB solve behind it runs
+    a full Monte-Carlo per call, but is fully determined by the CIM design
+    knobs (the PRNG key is fixed), so repeated ``energy_report`` calls for
+    the same design are free."""
+    return evaluate_point(
+        jax.random.PRNGKey(0), fmt_x, fmt_w, n_r=n_r, n_cols=n_cols)
 
 
 def energy_report(arch: ArchConfig, seq_len: int = 1) -> dict:
@@ -176,9 +275,7 @@ def energy_report(arch: ArchConfig, seq_len: int = 1) -> dict:
     """
     if not arch.cim.enabled:
         return {"enabled": False}
-    pt = evaluate_point(
-        jax.random.PRNGKey(0), arch.cim.fmt_x, arch.cim.fmt_w,
-        n_r=arch.cim.n_r, n_cols=1 << 11)
+    pt = _energy_point(arch.cim.fmt_x, arch.cim.fmt_w, arch.cim.n_r, 1 << 11)
     gr = pt.gr if pt.gr is not None else pt.conv
     fj_per_op = gr.total
     macs = 0

@@ -1,0 +1,207 @@
+"""Chunked-prefill regression net: the bucketed path must be
+decode-equivalent to the legacy token-by-token prefill on every cache
+family (attention KV, local ring buffer, RG-LRU state, SSM state, MoE
+capacity routing), must issue O(log) dispatches, and the decode step must
+move exactly one array to the host."""
+import math
+
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.models import init_params, prefill_step
+from repro.serving.engine import Engine, ServeConfig
+
+# one config per cache-merge family the engine serves
+ARCHS = [
+    ("attn", "qwen2-1.5b"),
+    ("rglru", "recurrentgemma-9b"),   # rglru + local ring layers
+    ("ssm", "mamba2-1.3b"),
+    ("moe", "grok-1-314b"),
+]
+
+
+def _setup(name, seed=0):
+    arch = get_config(name).reduced()
+    params = init_params(jax.random.PRNGKey(seed), arch)
+    return arch, params
+
+
+def _greedy(arch, params, prompt, n, **cfg_kw):
+    eng = Engine(arch, params, ServeConfig(batch_slots=2, max_ctx=64,
+                                           **cfg_kw))
+    slot = eng.add_request(prompt)
+    toks = [eng.step()[slot] for _ in range(n)]
+    return toks, eng
+
+
+@pytest.mark.parametrize("label,name", ARCHS)
+def test_chunked_prefill_matches_token_prefill(label, name):
+    """A bucket-padded prefill (11 tokens -> one 16-token dispatch) must
+    reproduce the token-by-token greedy continuation exactly."""
+    arch, params = _setup(name)
+    prompt = [int(t) for t in
+              np.random.RandomState(0).randint(1, arch.vocab_size, 11)]
+    got, eng_b = _greedy(arch, params, prompt, 6, prefill_mode="bucketed",
+                         prefill_bucket_min=4)
+    ref, eng_t = _greedy(arch, params, prompt, 6, prefill_mode="token")
+    assert got == ref, (label, got, ref)
+    assert eng_b.stats["prefill_dispatches"] == 1
+    assert eng_t.stats["prefill_dispatches"] == len(prompt)
+
+
+def test_multi_chunk_prefill_matches_token_prefill():
+    """Prompts longer than prefill_bucket_max split into several bucketed
+    dispatches; the chunk boundaries must be invisible to decode."""
+    arch, params = _setup("qwen2-1.5b")
+    prompt = [int(t) for t in
+              np.random.RandomState(1).randint(1, arch.vocab_size, 21)]
+    got, eng = _greedy(arch, params, prompt, 5, prefill_mode="bucketed",
+                       prefill_bucket_max=8)
+    ref, _ = _greedy(arch, params, prompt, 5, prefill_mode="token")
+    assert got == ref
+    assert eng.stats["prefill_dispatches"] == math.ceil(21 / 8)
+
+
+def test_chunk_longer_than_local_window():
+    """gemma3's sliding-window ring buffer: a single prefill chunk longer
+    than the window overwrites ring slots early queries still attend —
+    the chunk path must score against the pre-write ring."""
+    arch = get_config("gemma3-1b").reduced()   # window 64
+    params = init_params(jax.random.PRNGKey(0), arch)
+    prompt = [int(t) for t in
+              np.random.RandomState(2).randint(1, arch.vocab_size, 70)]
+
+    def gen(mode):
+        eng = Engine(arch, params, ServeConfig(batch_slots=2, max_ctx=256,
+                                               prefill_mode=mode))
+        slot = eng.add_request(prompt)
+        return [eng.step()[slot] for _ in range(5)]
+
+    assert gen("bucketed") == gen("token")
+
+
+def test_prefill_into_live_batch():
+    """A request joining mid-stream is prefilled with every other lane
+    frozen inside the dispatch (length 0) — the incumbent's continuation
+    and the joiner's solo continuation must both be preserved."""
+    arch, params = _setup("recurrentgemma-9b")
+
+    solo = Engine(arch, params, ServeConfig(batch_slots=2, max_ctx=64))
+    solo.add_request([9, 8, 7])
+    ref_joiner = [solo.step()[0] for _ in range(5)]
+
+    incumbent = Engine(arch, params, ServeConfig(batch_slots=2, max_ctx=64))
+    incumbent.add_request([1, 2, 3, 4, 5, 6])
+    ref_incumbent = [incumbent.step()[0] for _ in range(8)]
+
+    eng = Engine(arch, params, ServeConfig(batch_slots=2, max_ctx=64))
+    eng.add_request([1, 2, 3, 4, 5, 6])
+    inc = [eng.step()[0] for _ in range(3)]
+    s1 = eng.add_request([9, 8, 7])          # prefills alongside live slot 0
+    steps = [eng.step() for _ in range(5)]
+    inc += [o[0] for o in steps]
+    joiner = [o[s1] for o in steps]
+    assert joiner == ref_joiner
+    assert inc == ref_incumbent
+
+
+def test_prefill_dispatch_count_log_bounded():
+    """add_request must issue at most ceil(log2(len)) + 1 compiled
+    dispatches for prompts that fit the context (acceptance bound)."""
+    arch, params = _setup("qwen2-1.5b")
+    for n in (1, 2, 7, 13, 31):
+        eng = Engine(arch, params, ServeConfig(batch_slots=1, max_ctx=64))
+        eng.add_request(list(range(1, n + 1)))
+        bound = math.ceil(math.log2(n)) + 1 if n > 1 else 1
+        assert eng.stats["prefill_dispatches"] <= bound, (n, eng.stats)
+
+
+def test_prompt_must_leave_decode_room():
+    """A prompt of max_ctx tokens has no cache position left for the first
+    decode write (which would clamp onto the last prompt entry and corrupt
+    the lane) — add_request must reject it up front."""
+    arch, params = _setup("qwen2-1.5b")
+    eng = Engine(arch, params, ServeConfig(batch_slots=1, max_ctx=8))
+    with pytest.raises(ValueError, match="max_ctx"):
+        eng.add_request(list(range(1, 9)))
+    eng.add_request(list(range(1, 8)))     # max_ctx - 1 is fine
+    assert 0 in eng.step()
+
+
+def test_decode_step_single_host_transfer(monkeypatch):
+    """The fused decode moves exactly one (batch_slots,) int32 array of
+    sampled ids to the host per step — logits stay on device."""
+    arch, params = _setup("qwen2-1.5b")
+    eng = Engine(arch, params, ServeConfig(batch_slots=2, max_ctx=64))
+    eng.add_request([3, 1, 4, 1, 5])
+
+    calls = []
+    orig = Engine._fetch
+
+    def counting_fetch(ids_dev):
+        out = orig(ids_dev)
+        calls.append(out)
+        return out
+
+    monkeypatch.setattr(Engine, "_fetch", staticmethod(counting_fetch))
+    out = eng.step()
+    assert len(calls) == 1
+    assert calls[0].shape == (2,) and calls[0].dtype == np.int32
+    assert out[0] == int(calls[0][0])
+
+
+def test_temperature_sampling_on_device():
+    """Categorical sampling is fused in the decode executable: valid ids,
+    reproducible under the same key, varying across keys."""
+    arch, params = _setup("qwen2-1.5b")
+
+    def gen(seed):
+        eng = Engine(arch, params, ServeConfig(batch_slots=1, max_ctx=64,
+                                               temperature=0.8))
+        eng.add_request([5, 6, 7])
+        return [eng.step(jax.random.PRNGKey(seed + i))[0] for i in range(6)]
+
+    a, b, c = gen(0), gen(0), gen(100)
+    assert a == b
+    assert a != c  # astronomically unlikely to collide on 6 draws
+    assert all(0 <= t < arch.vocab_size for t in a + c)
+
+
+def test_prefill_step_frozen_lane_bitwise():
+    """prefill_step with length 0 on a lane returns that lane's cache
+    bitwise unchanged — the contract that lets the engine skip merging."""
+    from repro.models import init_cache
+
+    arch, params = _setup("mamba2-1.3b")
+    cache = init_cache(arch, 2, 32, dtype=np.float32)
+    # advance lane 1 first so its state is nonzero
+    toks = np.zeros((2, 8), np.int32)
+    toks[1, :] = np.arange(1, 9)
+    _, cache = jax.jit(
+        lambda p, t, c, i, l: prefill_step(p, t, arch, c, i, l))(
+        params, toks, cache, np.zeros(2, np.int32),
+        np.array([0, 8], np.int32))
+    before = jax.tree.map(lambda a: np.asarray(a), cache)
+    # now prefill lane 0; lane 1 must be untouched
+    toks2 = np.zeros((2, 8), np.int32)
+    toks2[0, :5] = [9, 8, 7, 6, 5]
+    _, cache2 = jax.jit(
+        lambda p, t, c, i, l: prefill_step(p, t, arch, c, i, l))(
+        params, toks2, cache, np.array([0, 8], np.int32),
+        np.array([5, 0], np.int32))
+    after = jax.tree.map(lambda a: np.asarray(a), cache2)
+
+    def lane(tree, b):
+        # stacked superblock caches carry batch on axis 1; tail on axis 0
+        sup = jax.tree.leaves(jax.tree.map(lambda a: a[:, b], tree.get(
+            "superblocks", {})))
+        tail = jax.tree.leaves(jax.tree.map(lambda a: a[b], tree.get(
+            "tail", {})))
+        return sup + tail
+
+    for x, y in zip(lane(before, 1), lane(after, 1)):
+        np.testing.assert_array_equal(x, y)
+    assert any(np.any(x != y)
+               for x, y in zip(lane(before, 0), lane(after, 0)))
