@@ -1,0 +1,188 @@
+"""Bench-regression checker: fresh --smoke runs vs the committed records.
+
+Runs the smoke configuration of the bench scripts (kernel_bench,
+serve_bench), then walks the committed ``experiments/bench/*_smoke.json``
+records and compares every timing leaf against the fresh run at the same
+path:
+
+* ``warm_us`` / ``ttft_ms``  — time-like: fresh / committed > threshold
+  (default 1.5x) is a regression;
+* ``decode_tok_s``           — throughput-like: committed / fresh >
+  threshold is a regression.
+
+Cells faster than ``--min-us`` (default 300 us) in the committed record
+are skipped: at smoke sizes those measure pure dispatch overhead and are
+machine-noise, not kernel behavior. Cold times are ignored for the same
+reason (compile time varies wildly across runners), and so are
+``pallas_interpret`` cells — the debug interpreter's wall time is
+Python-loop overhead with multi-x run-to-run variance, not a hot path
+this gate protects. A first-pass regression is re-measured once and only
+fails if it reproduces (per-cell best of both runs).
+
+Exit code is nonzero on any regression, so the CI bench-smoke lane fails
+when the hot paths the committed numbers document rot. Refresh the
+committed smoke records (run the bench scripts with ``--smoke`` on the
+reference machine and commit the JSONs) when a *deliberate* perf change
+moves them.
+
+Run:  PYTHONPATH=src python -m benchmarks.compare [--threshold 1.5]
+          [--min-us 300] [--bench kernel,serve] [--no-run]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import subprocess
+import sys
+
+from benchmarks.common import RESULTS_DIR
+
+# timing leaves: key -> True when larger-is-better (throughput)
+_TIME_KEYS = {"warm_us": False, "ttft_ms": False, "decode_tok_s": True}
+# committed-value scale to microseconds, for the noise floor
+_TO_US = {"warm_us": 1.0, "ttft_ms": 1e3}
+
+_BENCHES = ("kernel", "serve")
+
+
+def _walk(tree, path=()):
+    if isinstance(tree, dict):
+        for k, v in tree.items():
+            yield from _walk(v, path + (k,))
+    elif isinstance(tree, (int, float)) and path and path[-1] in _TIME_KEYS:
+        yield path, float(tree)
+
+
+def _lookup(tree, path):
+    for k in path:
+        if not isinstance(tree, dict) or k not in tree:
+            return None
+        tree = tree[k]
+    return tree if isinstance(tree, (int, float)) else None
+
+
+def compare(committed: dict, fresh: dict, *, threshold: float = 1.5,
+            min_us: float = 300.0, label: str = "") -> list:
+    """Return a list of regression strings (empty = clean)."""
+    regressions = []
+    for path, want in _walk(committed):
+        if "pallas_interpret" in path:
+            continue  # debug interpreter: not a guarded hot path
+        key = path[-1]
+        us = want * _TO_US.get(key, 0.0)
+        if not _TIME_KEYS[key] and us < min_us:
+            continue  # dispatch-overhead noise at smoke sizes
+        got = _lookup(fresh, path)
+        if got is None or got <= 0 or want <= 0:
+            continue  # shape/backend set changed; absence is not slowness
+        ratio = (want / got) if _TIME_KEYS[key] else (got / want)
+        if ratio > threshold:
+            regressions.append(
+                f"{label}{'/'.join(path)}: {want:.1f} -> {got:.1f} "
+                f"({ratio:.2f}x worse, threshold {threshold}x)")
+    return regressions
+
+
+def _committed(name: str) -> dict:
+    """The committed baseline record.
+
+    Read from git HEAD when available: a fresh smoke run overwrites the
+    working-tree JSON, so reading the file would make any *second* compare
+    invocation (or --no-run) diff a record against itself and pass
+    vacuously. Falls back to the working-tree file outside a checkout."""
+    rel = f"experiments/bench/{name}.json"
+    root = os.path.abspath(os.path.join(RESULTS_DIR, "..", ".."))
+    try:
+        blob = subprocess.run(
+            ["git", "show", f"HEAD:{rel}"], cwd=root,
+            capture_output=True, check=True, text=True).stdout
+        return json.loads(blob)
+    except (OSError, subprocess.CalledProcessError, ValueError):
+        pass
+    return _on_disk(name)
+
+
+def _on_disk(name: str) -> dict:
+    """The working-tree record (what a just-finished smoke run wrote)."""
+    try:
+        with open(os.path.join(RESULTS_DIR, f"{name}.json")) as f:
+            return json.load(f)
+    except (OSError, ValueError):
+        return {}
+
+
+def _merge_records(a, b, path=()):
+    """Elementwise best of two bench records: min for time-like leaves,
+    max for throughput-like — a regression must reproduce across runs."""
+    if isinstance(a, dict) and isinstance(b, dict):
+        out = dict(b)
+        for k, v in a.items():
+            out[k] = _merge_records(v, b[k], path + (k,)) if k in b else v
+        return out
+    if (isinstance(a, (int, float)) and isinstance(b, (int, float))
+            and path and path[-1] in _TIME_KEYS):
+        return max(a, b) if _TIME_KEYS[path[-1]] else min(a, b)
+    return a
+
+
+def _fresh_run(bench: str):
+    if bench == "kernel":
+        from benchmarks import kernel_bench
+        return kernel_bench.run(smoke=True)
+    from benchmarks import serve_bench
+    return serve_bench.run(**serve_bench.SMOKE_PARAMS)
+
+
+def run(benches=_BENCHES, threshold=1.5, min_us=300.0, fresh=True) -> list:
+    """Returns the regression list (empty = clean). The committed record is
+    snapshotted into memory *before* the fresh smoke run overwrites the
+    on-disk JSON. A first-run regression is re-measured once and the
+    per-cell best of both runs is compared — transient scheduler noise on
+    shared runners must not fail the gate, a real slowdown reproduces.
+    ``fresh=False`` compares the on-disk records against the git-HEAD
+    baseline without running anything (for use after separate smoke
+    steps)."""
+    regressions = []
+    for bench in benches:
+        name = "kernel_bench_smoke" if bench == "kernel" else "serve_bench_smoke"
+        committed = _committed(name)
+        new = _fresh_run(bench) if fresh else _on_disk(name)
+        found = compare(committed, new, threshold=threshold, min_us=min_us,
+                        label=f"{bench}:")
+        if found and fresh:
+            print(f"[compare] {bench}: {len(found)} candidate regression(s); "
+                  "re-measuring to confirm")
+            new = _merge_records(new, _fresh_run(bench))
+            found = compare(committed, new, threshold=threshold,
+                            min_us=min_us, label=f"{bench}:")
+        regressions += found
+    return regressions
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--threshold", type=float, default=1.5,
+                    help="warm-time ratio above which a cell is a regression")
+    ap.add_argument("--min-us", type=float, default=300.0,
+                    help="skip committed cells faster than this (noise floor)")
+    ap.add_argument("--bench", default="kernel,serve",
+                    help="comma list: kernel,serve")
+    ap.add_argument("--no-run", action="store_true",
+                    help="compare records already on disk instead of "
+                         "running fresh --smoke benches")
+    args = ap.parse_args()
+    regressions = run(
+        tuple(b.strip() for b in args.bench.split(",") if b.strip()),
+        threshold=args.threshold, min_us=args.min_us, fresh=not args.no_run)
+    if regressions:
+        print("\n[compare] BENCH REGRESSIONS:", file=sys.stderr)
+        for r in regressions:
+            print(f"  {r}", file=sys.stderr)
+        raise SystemExit(1)
+    print("[compare] no bench regressions "
+          f"(threshold {args.threshold}x, floor {args.min_us:.0f}us)")
+
+
+if __name__ == "__main__":
+    main()

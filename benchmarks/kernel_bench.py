@@ -19,12 +19,17 @@ Two shapes by default, both recorded to experiments/bench/kernel_bench.json:
   per decoded token, and where the Pallas path's mandatory 128-alignment
   padding wastes the most work.
 * ``train_large_m`` (2048×768×3072) — the training-shape regime the
-  ROADMAP flags, where the blocked einsum is bandwidth-bound.
+  ROADMAP flagged: the blocked einsum is bandwidth-bound there, and the
+  fused ``tiled`` backend is the fix (the headline
+  ``tiled_warm_speedup_over_{ref,xla}`` rows record its win).
   ``pallas_interpret`` is excluded here (the interpreter would take hours
   at this size, and the debug cross-check adds nothing at scale).
 
-Override with --m/--k/--n for a single custom shape; --smoke runs one tiny
-shape with minimal iterations (the CI bench lane).
+Select named shapes with ``--shapes train_large_m`` (comma list), or
+override with --m/--k/--n for a single custom shape; --smoke runs one tiny
+shape with minimal iterations (the CI bench lane). Named-subset and custom
+runs write ``kernel_bench_partial``/``kernel_bench_custom`` records so
+they can never clobber the committed full-sweep numbers.
 
 On TPU the figure of merit for the ``pallas`` backend is the lowered
 structure; off-TPU ``pallas`` is skipped (it would silently interpret)
@@ -40,7 +45,7 @@ from repro.core.formats import FP4_E2M1, FP6_E3M2, quantize
 from repro.kernels.dispatch import grmac_matmul
 from benchmarks.common import emit, save_json, time_call
 
-_DEFAULT_BACKENDS = ("xla", "ref", "pallas_interpret")
+_DEFAULT_BACKENDS = ("xla", "tiled", "ref", "pallas_interpret")
 _GRANS = ["conv", "row", "unit"]
 _SHAPES = {
     "edge_decode": (16, 768, 3072),
@@ -113,19 +118,44 @@ def run_shape(backends, m, k, n, n_iter=5):
         rf, xl = out["backends"]["ref"], out["backends"]["xla"]
         out["xla_warm_speedup_over_ref"] = {
             g: rf[g]["warm_us"] / xl[g]["warm_us"] for g in _GRANS}
+    if "tiled" in out["backends"]:
+        td = out["backends"]["tiled"]
+        for base in ("ref", "xla"):
+            if base not in out["backends"]:
+                continue
+            bs = out["backends"][base]
+            sp = {g: bs[g]["warm_us"] / td[g]["warm_us"] for g in _GRANS}
+            out[f"tiled_warm_speedup_over_{base}"] = sp
+            print(f"tiled speedup over {base} (warm): "
+                  + ", ".join(f"{g}={v:.2f}x" for g, v in sp.items()))
     return out
 
 
 def run(backends=None, shapes=None, smoke=False, n_iter=5, record=None):
     """``record`` names the JSON written under experiments/bench/. Only the
-    full default sweep writes the committed ``kernel_bench`` record —
-    smoke/custom/partial runs get their own file so a quick local run can
-    never clobber the measured numbers the ROADMAP cites."""
-    if not backends or backends == ["all"]:
+    full default sweep (all default backends, all named shapes) writes the
+    committed ``kernel_bench`` record — smoke/custom/partial runs get their
+    own file so a quick local run can never clobber the measured numbers
+    the ROADMAP cites. ``shapes`` may be a {label: (m, k, n)} dict or a
+    list of names from ``_SHAPES``."""
+    explicit_backends = bool(backends) and backends != ["all"]
+    if not explicit_backends:
         backends = list(_DEFAULT_BACKENDS)
         if jax.default_backend() == "tpu":
             backends.insert(0, "pallas")
-    default_sweep = shapes is None and not smoke
+    if isinstance(shapes, (list, tuple)):
+        unknown = [s for s in shapes if s not in _SHAPES]
+        if unknown:
+            raise SystemExit(
+                f"unknown shape names {unknown}; choose from "
+                f"{sorted(_SHAPES)}")
+        shapes = {s: _SHAPES[s] for s in shapes}
+    default_sweep = (shapes is None or shapes == _SHAPES) \
+        and not smoke and not explicit_backends
+    # only a *plain* --smoke run (default backends, no shape selection) may
+    # write the committed kernel_bench_smoke record the CI compare gate
+    # diffs against; any named/custom/partial combination gets _partial
+    plain_smoke = smoke and shapes is None and not explicit_backends
     if shapes is None:
         shapes = {"smoke": _SMOKE_SHAPE} if smoke else dict(_SHAPES)
     if smoke:
@@ -136,7 +166,8 @@ def run(backends=None, shapes=None, smoke=False, n_iter=5, record=None):
         out["shapes"][label] = run_shape(bl, m, k, n, n_iter=n_iter)
     if record is None:
         record = ("kernel_bench" if default_sweep
-                  else "kernel_bench_smoke" if smoke else "kernel_bench_custom")
+                  else "kernel_bench_smoke" if plain_smoke
+                  else "kernel_bench_partial")
     save_json(record, out)
     return out
 
@@ -145,7 +176,10 @@ if __name__ == "__main__":
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--backend", default="all",
                     help="'all' or comma list of dispatch backends "
-                         "(xla,ref,pallas,pallas_interpret)")
+                         "(xla,tiled,ref,pallas,pallas_interpret)")
+    ap.add_argument("--shapes", default="",
+                    help="comma list of named shapes "
+                         f"({','.join(_SHAPES)}); empty -> default sweep")
     ap.add_argument("--m", type=int, default=0,
                     help="custom shape (with --k/--n); 0 -> default sweep")
     ap.add_argument("--k", type=int, default=768)
@@ -153,6 +187,11 @@ if __name__ == "__main__":
     ap.add_argument("--smoke", action="store_true",
                     help="tiny shape + minimal iterations (CI bench lane)")
     args = ap.parse_args()
-    shapes = {"custom": (args.m, args.k, args.n)} if args.m else None
+    if args.m:
+        shapes = {"custom": (args.m, args.k, args.n)}
+    elif args.shapes:
+        shapes = [s.strip() for s in args.shapes.split(",") if s.strip()]
+    else:
+        shapes = None
     run([b.strip() for b in args.backend.split(",")],
         shapes=shapes, smoke=args.smoke)

@@ -1,8 +1,11 @@
-"""Benchmark harness — one module per paper table/figure.
+"""Benchmark harness — one module per paper table/figure, plus the perf
+suites (``kernel_bench``, ``serve_bench``) and the bench-regression gate
+(``compare``, which diffs fresh --smoke runs against the committed
+experiments/bench/*_smoke.json records).
 
 Prints ``name,us_per_call,derived`` CSV rows and writes JSON payloads under
 experiments/bench/ for EXPERIMENTS.md. Exit code is nonzero if any paper
-claim check fails.
+claim check or bench-regression check fails.
 """
 from __future__ import annotations
 
@@ -11,6 +14,7 @@ import sys
 
 def main() -> None:
     from benchmarks import (
+        compare,
         e2e_energy,
         fig8_linearity,
         fig9_quant_noise,
@@ -64,6 +68,15 @@ def main() -> None:
     kernel_bench.run(shapes={"edge_decode": kernel_bench._SHAPES["edge_decode"]},
                      record="kernel_bench_claims")
     e2e_energy.run()
+
+    # bench-regression gate: fresh --smoke runs vs the committed records
+    # (see benchmarks/compare.py; CI runs the same check per push). The
+    # threshold is machine-tolerant, like the CI lane's: the committed
+    # baselines come from one reference machine, and a uniformly slower
+    # box is not a regression — only order-of-magnitude rot should fail
+    # the harness.
+    failures += [f"bench-regression:{r}"
+                 for r in compare.run(threshold=3.0, min_us=500.0)]
 
     if failures:
         print(f"\n[benchmarks] CLAIM CHECK FAILURES: {failures}",

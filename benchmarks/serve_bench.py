@@ -35,9 +35,14 @@ ARCHS = [
     ("moe", "grok-1-314b"),
 ]
 _MODES = ("token", "bucketed")
+# the one smoke configuration: shared by the --smoke CLI (which refreshes
+# the committed serve_bench_smoke.json) and benchmarks/compare.py's fresh
+# run, so the regression gate always compares like-for-like configs
+SMOKE_PARAMS = dict(prompt_len=12, steps=4, slots=2, ctx=64,
+                    record="serve_bench_smoke")
 
 
-def bench_arch(name, prompt_len, steps, slots, ctx):
+def bench_arch(name, prompt_len, steps, slots, ctx, trials=3):
     arch = get_config(name).reduced()
     params = init_params(jax.random.PRNGKey(0), arch)
     prompt = [int(t) for t in
@@ -50,23 +55,29 @@ def bench_arch(name, prompt_len, steps, slots, ctx):
         warm.add_request(prompt)
         warm.step()
 
-        eng = Engine(arch, params, cfg)
-        t0 = time.perf_counter()
-        slot = eng.add_request(prompt)
-        first = eng.step()
-        ttft = time.perf_counter() - t0
-        assert slot in first
-        t0 = time.perf_counter()
-        for _ in range(steps):
-            eng.step()
-        decode_s = time.perf_counter() - t0
+        # best of ``trials`` fresh engines: a single-shot TTFT sample is
+        # dominated by scheduler jitter at small sizes, which made the
+        # compare.py regression gate flap — the best observed time is the
+        # stable "what the code can do" figure of merit
+        ttft, tok_s = float("inf"), 0.0
+        for _ in range(trials):
+            eng = Engine(arch, params, cfg)
+            t0 = time.perf_counter()
+            slot = eng.add_request(prompt)
+            first = eng.step()
+            ttft = min(ttft, time.perf_counter() - t0)
+            assert slot in first
+            t0 = time.perf_counter()
+            for _ in range(steps):
+                eng.step()
+            tok_s = max(tok_s, steps / (time.perf_counter() - t0))
         res[mode] = {
             "ttft_ms": ttft * 1e3,
             "prefill_dispatches": eng.stats["prefill_dispatches"],
-            "decode_tok_s": steps / decode_s,
+            "decode_tok_s": tok_s,
         }
         emit(f"serve/{name}/{mode}", ttft * 1e6,
-             f"tok_s={steps / decode_s:.0f}"
+             f"tok_s={tok_s:.0f}"
              f";dispatches={eng.stats['prefill_dispatches']}")
     res["ttft_speedup"] = res["token"]["ttft_ms"] / res["bucketed"]["ttft_ms"]
     return res
@@ -113,8 +124,7 @@ if __name__ == "__main__":
     if args.smoke:
         # separate record: a smoke run must not clobber the committed
         # full-size serve_bench.json the ROADMAP cites
-        run(prompt_len=12, steps=4, slots=2, ctx=64,
-            record="serve_bench_smoke")
+        run(**SMOKE_PARAMS)
     else:
         run(prompt_len=args.prompt_len, steps=args.steps, slots=args.slots,
             ctx=args.ctx)

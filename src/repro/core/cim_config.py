@@ -18,10 +18,13 @@ is the CIM array depth, i.e. the K-block over which one analog accumulation
 + one ADC conversion happens.
 
 ``backend`` picks the grmac execution backend (see ``kernels.dispatch``):
-"auto" (fast XLA path off-TPU, Pallas kernel on TPU), "xla", "pallas",
-"pallas_interpret" (debug), or "ref" (jnp oracle). Threaded through
-``cim_matmul`` and overridable per call site (ServeConfig.cim_backend,
-TrainConfig.cim_backend).
+"auto" (shape-aware plan: batched-einsum XLA path at small/decode M, fused
+tiled path at large/training M, Pallas kernel on TPU — optionally refined
+by the ``REPRO_GRMAC_AUTOTUNE=1`` measured plan cache), "xla", "tiled",
+"pallas", "pallas_interpret" (debug), or "ref" (jnp oracle). Threaded
+through ``cim_matmul`` and overridable per call site
+(ServeConfig.cim_backend, TrainConfig.cim_backend). ``tile_m``/``tile_n``
+pin the tiled/Pallas tile sizes (None lets the plan decide).
 """
 from __future__ import annotations
 
@@ -41,7 +44,9 @@ class CIMConfig:
     fmt_w: FPFormat = FP4_E2M1
     n_r: int = 32                      # CIM array rows == matmul K-block
     enob: Optional[float] = None       # None -> solve from core.adc defaults
-    backend: str = "auto"              # auto | xla | pallas | pallas_interpret | ref
+    backend: str = "auto"     # auto | xla | tiled | pallas | pallas_interpret | ref
+    tile_m: Optional[int] = None       # None -> planned (tiled/pallas only)
+    tile_n: Optional[int] = None       # None -> planned; 0 -> no N-tiling
     # Per-tensor pre-scale: activations are scaled into [-1, 1] by their
     # running absmax before quantization (standard PTQ practice); the scale
     # is folded back after the MAC.
@@ -68,3 +73,7 @@ class CIMConfig:
 
     def with_backend(self, backend: str) -> "CIMConfig":
         return dataclasses.replace(self, backend=backend)
+
+    def with_tiles(self, tile_m: Optional[int],
+                   tile_n: Optional[int] = None) -> "CIMConfig":
+        return dataclasses.replace(self, tile_m=tile_m, tile_n=tile_n)

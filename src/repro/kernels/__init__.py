@@ -1,4 +1,4 @@
-"""GR-MAC kernel subsystem: one op, many backends.
+"""GR-MAC kernel subsystem: one op, many backends, shape-aware planning.
 
 The paper's core artifact — the gain-ranged MAC matmul — is exposed as a
 single dispatch surface with interchangeable, cross-validated execution
@@ -6,20 +6,60 @@ backends:
 
     ops.cim_matmul        model-facing op (pre-scale, mode switch, STE
                           gradients); what ``models.layers`` calls
-    dispatch.grmac_matmul backend selection + shape padding
-    xla.py                fast fully-vectorized pure-XLA backend
-                          (default on CPU/GPU)
+    dispatch.grmac_matmul plan-based backend selection + shape padding
+    xla.py                fully-vectorized batched-einsum backend — fastest
+                          at small M (decode shapes) on CPU/GPU
+    tiled.py              fused M(xN)-tiled backend (``lax.scan`` tiles,
+                          den/ADC/renorm epilogue inside the tile body) —
+                          the large-M (training-shape) winner off-TPU
     grmac_matmul.py       Pallas TPU kernel (default on TPU); its
                           interpret mode is kept as an explicit debug
                           backend ("pallas_interpret")
     ref.py                readable pure-jnp oracle ("ref")
 
-Backend choice: ``CIMConfig.backend`` (or a ``backend=`` call override,
-or the ``REPRO_GRMAC_BACKEND`` env var). All backends implement the same
-semantics contract and are cross-checked in tests/test_kernels.py;
-``benchmarks/kernel_bench.py --backend all`` compares their wall time.
+Backend selection
+-----------------
+``CIMConfig.backend`` (or a ``backend=`` call override) names a backend or
+"auto". "auto" resolves through ``dispatch.plan_for``: pallas on TPU;
+off-TPU a ``Plan(backend, tile_m, tile_n)`` keyed on
+``(M, K, N, granularity, formats, n_r, platform)`` — served from the
+in-memory plan table, then the persisted JSON plan cache, then (with
+autotuning enabled) a measure-once micro-probe, else the static heuristic
+(``M >= 64`` -> tiled, smaller -> xla). ``CIMConfig.tile_m``/``tile_n``
+(and ``grmac_matmul(tile_m=, tile_n=)``) pin tile sizes explicitly;
+``ServeConfig.cim_backend``/``TrainConfig.cim_backend`` (+ their
+``cim_tile_m``/``cim_tile_n``) override per call site.
+
+Environment knobs
+-----------------
+``REPRO_GRMAC_BACKEND``      force a backend name for every "auto" call
+                             (explicit ``backend=`` arguments still win).
+``REPRO_GRMAC_AUTOTUNE=1``   enable the micro-autotune: unknown shapes are
+                             probed once (candidate backends x tile sizes,
+                             on synthetic operands), the winner is
+                             persisted, and later calls — in this or any
+                             other process — reuse it for free.
+``REPRO_GRMAC_PLAN_CACHE``   path of the persisted plan JSON (default
+                             ``~/.cache/repro/grmac_plans.json``).
+``REPRO_GRMAC_BF16_VALUES=1``  run the values einsums of the xla/tiled
+                             backends with bf16 operands + f32 accumulator
+                             when the formats make every product exact
+                             (silent f32 fallback otherwise; see
+                             kernels/xla.py for the caveat on accelerators).
+
+All backends implement the same semantics contract and are cross-checked
+at 0-ulp tolerance in tests/test_kernels.py and tests/test_properties.py;
+``benchmarks/kernel_bench.py --backend all`` compares their wall time and
+``benchmarks/compare.py`` guards the committed numbers against regression.
 """
-from repro.kernels.dispatch import BACKENDS, grmac_matmul, resolve_backend
+from repro.kernels.dispatch import (
+    BACKENDS,
+    Plan,
+    grmac_matmul,
+    plan_for,
+    resolve_backend,
+)
 from repro.kernels.ops import cim_matmul
 
-__all__ = ["BACKENDS", "cim_matmul", "grmac_matmul", "resolve_backend"]
+__all__ = ["BACKENDS", "Plan", "cim_matmul", "grmac_matmul", "plan_for",
+           "resolve_backend"]

@@ -18,8 +18,15 @@ outputs into the float32 output tile.
 The values matmul runs in bfloat16: both operands live on low-bit format
 grids (≤ 5 significant bits), so bf16 products/MXU accumulation are exact.
 
-Shapes must be pre-padded to multiples of the block sizes (see ops.py);
-``block_k`` must be a multiple of ``n_r`` and 128-aligned for the MXU.
+Shapes must be pre-padded to multiples of the block sizes (see
+``dispatch._run_plan``, which also threads the planner's ``tile_m``/
+``tile_n`` — rounded up to 128 — into ``block_m``/``block_n``, so the TPU
+grid tiles M the same way the host-side tiled backend does); ``block_k``
+must be a multiple of ``n_r`` and 128-aligned for the MXU. The per-column
+epilogue (den -> ADC -> renorm -> accumulate) is fused in the kernel body,
+matching kernels/tiled.py's formulation, and the K sub-block loop rolls
+into a ``fori_loop`` past ``_UNROLL_SUBBLOCKS`` columns so large planned
+K-tiles don't blow up the lowered kernel.
 """
 from __future__ import annotations
 
@@ -34,6 +41,11 @@ from repro.compat import pallas_tpu_compiler_params
 from repro.core.formats import FPFormat
 
 __all__ = ["grmac_matmul_pallas"]
+
+# Sub-block (n_r-deep column) count up to which the K loop is fully
+# unrolled into straight-line MXU dots; beyond it a lax.fori_loop keeps the
+# lowered kernel size O(1) in block_k (plans may pick large K-tiles).
+_UNROLL_SUBBLOCKS = 8
 
 
 def _pow2(e: jax.Array) -> jax.Array:
@@ -98,28 +110,45 @@ def _kernel(
         # (cheaper than streaming a second K×N operand from HBM).
         _, gw = _quant_decompose(w, fmt_w)
 
+    if granularity not in ("conv", "row", "unit"):
+        raise ValueError(granularity)
+
     xq16 = xq.astype(jnp.bfloat16)
     w16 = w.astype(jnp.bfloat16)
 
-    acc = jnp.zeros_like(o_ref)
-    for s in range(block_k // n_r):
-        sl = slice(s * n_r, (s + 1) * n_r)
-        num = jnp.dot(xq16[:, sl], w16[sl, :], preferred_element_type=jnp.float32)
+    def sub_block(start, acc):
+        """One n_r-deep analog column: MXU dot + fused den/ADC/renorm
+        epilogue — the same per-tile formulation kernels/tiled.py scans on
+        the host side, so the TPU lowering matches the planned backend."""
+        xs = jax.lax.dynamic_slice_in_dim(xq16, start, n_r, axis=1)
+        ws = jax.lax.dynamic_slice_in_dim(w16, start, n_r, axis=0)
+        num = jnp.dot(xs, ws, preferred_element_type=jnp.float32)
         if granularity == "conv":
             v = num * (1.0 / n_r)
-            acc = acc + _adc(v, enob) * float(n_r)
-        elif granularity == "row":
-            den = jnp.sum(gx[:, sl], axis=1, keepdims=True)      # (bm, 1)
+            return acc + _adc(v, enob) * float(n_r)
+        if granularity == "row":
+            gs = jax.lax.dynamic_slice_in_dim(gx, start, n_r, axis=1)
+            den = jnp.sum(gs, axis=1, keepdims=True)             # (bm, 1)
             scale = 2.0**fmt_x.e_max
             v = num * scale / den
-            acc = acc + _adc(v, enob) * (den * (1.0 / scale))
-        elif granularity == "unit":
-            den = jnp.dot(gx[:, sl], gw[sl, :], preferred_element_type=jnp.float32)
-            scale = 2.0 ** (fmt_x.e_max + fmt_w.e_max)
-            v = num * scale / den
-            acc = acc + _adc(v, enob) * (den * (1.0 / scale))
-        else:
-            raise ValueError(granularity)
+            return acc + _adc(v, enob) * (den * (1.0 / scale))
+        gs = jax.lax.dynamic_slice_in_dim(gx, start, n_r, axis=1)
+        gws = jax.lax.dynamic_slice_in_dim(gw, start, n_r, axis=0)
+        den = jnp.dot(gs, gws, preferred_element_type=jnp.float32)
+        scale = 2.0 ** (fmt_x.e_max + fmt_w.e_max)
+        v = num * scale / den
+        return acc + _adc(v, enob) * (den * (1.0 / scale))
+
+    acc = jnp.zeros_like(o_ref)
+    n_sub = block_k // n_r
+    if n_sub <= _UNROLL_SUBBLOCKS:
+        for s in range(n_sub):
+            acc = sub_block(s * n_r, acc)
+    else:
+        # Large planned K-tiles: a rolled loop keeps the lowered kernel
+        # O(1) in block_k instead of unrolling hundreds of sub-blocks.
+        acc = jax.lax.fori_loop(
+            0, n_sub, lambda s, a: sub_block(s * n_r, a), acc)
     o_ref[...] += acc
 
 

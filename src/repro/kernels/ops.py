@@ -11,10 +11,11 @@ Pipeline
      off        exact matmul (digital baseline)
      fakequant  format-grid quantization of x and w, exact accumulation
      grmac      full GR-MAC block simulation, executed by the backend
-                selected through ``kernels.dispatch`` (``cfg.backend`` or
-                the ``backend=`` override: fast XLA path by default
-                off-TPU, the Pallas kernel on TPU, interpret-mode Pallas
-                and the jnp oracle as explicit debug choices)
+                planned through ``kernels.dispatch`` (``cfg.backend`` or
+                the ``backend=`` override; "auto" plans per shape — small-M
+                decode hits the batched-einsum XLA path, large-M training
+                shapes the fused tiled path, TPU the Pallas kernel;
+                ``cfg.tile_m``/``cfg.tile_n`` pin the tile sizes)
 3. straight-through gradients: the backward pass applies the exact-matmul
    VJP to the *raw* (unquantized, unscaled) saved operands — the standard
    STE estimator — so the op is trainable.
@@ -62,6 +63,8 @@ def _cim_matmul_2d(x, w, cfg: CIMConfig, backend: str):
             enob=cfg.resolved_enob(),
             granularity=cfg.granularity,
             backend=backend,
+            tile_m=cfg.tile_m,
+            tile_n=cfg.tile_n,
         )
     else:  # off
         out = xn @ wn

@@ -35,7 +35,18 @@ from repro.configs.base import ArchConfig
 from repro.core.dse import evaluate_point
 from repro.models import decode_step, init_cache, prefill_step
 
-__all__ = ["ServeConfig", "Engine", "energy_report"]
+__all__ = ["ServeConfig", "Engine", "StepResult", "energy_report"]
+
+
+class StepResult(dict):
+    """``Engine.step`` result: slot id -> sampled token (dict, as before),
+    plus ``finished`` — the slot ids freed this step (per-slot EOS or
+    context exhaustion), in ascending slot order. A finished slot is
+    immediately claimable by ``add_request``."""
+
+    def __init__(self, tokens: dict, finished: List[int]):
+        super().__init__(tokens)
+        self.finished = finished
 
 
 def _merge_cache(old, new, mask):
@@ -103,8 +114,16 @@ class ServeConfig:
     temperature: float = 0.0
     cache_dtype: str = "float32"
     # GR-MAC backend override for CIM-enabled archs (None keeps the arch's
-    # CIMConfig.backend; see kernels.dispatch for the choices)
+    # CIMConfig.backend; see kernels.dispatch for the choices). Decode is a
+    # small-M matmul, so "auto" plans onto the batched-einsum xla path;
+    # cim_tile_m / cim_tile_n pin the tiled/Pallas tile sizes when set.
     cim_backend: Optional[str] = None
+    cim_tile_m: Optional[int] = None
+    cim_tile_n: Optional[int] = None
+    # Default EOS token id: a lane emitting it is finished and its slot is
+    # freed immediately (per-request override via add_request(eos_id=...)).
+    # None decodes every lane to max_ctx (the legacy behavior).
+    eos_id: Optional[int] = None
     # "bucketed": chunked prefill, prompts padded to power-of-two buckets
     # (the default); "token": legacy one-dispatch-per-token prefill, kept
     # as the equivalence oracle for tests/benchmarks
@@ -118,6 +137,9 @@ class Engine:
         assert arch.input_mode == "tokens", "engine serves token models"
         if cfg.cim_backend is not None:
             arch = arch.replace(cim=arch.cim.with_backend(cfg.cim_backend))
+        if cfg.cim_tile_m is not None or cfg.cim_tile_n is not None:
+            arch = arch.replace(cim=arch.cim.with_tiles(
+                cfg.cim_tile_m, cfg.cim_tile_n))
         self.arch = arch
         self.cfg = cfg
         self.params = params
@@ -128,6 +150,11 @@ class Engine:
         self.tokens: List[List[int]] = [[] for _ in range(cfg.batch_slots)]
         # last emitted token per lane, fed back as next decode input
         self._last_host = np.zeros(cfg.batch_slots, np.int32)
+        # per-slot EOS id (-1: none); seeded from cfg.eos_id per request
+        self._eos = np.full(cfg.batch_slots, -1, np.int64)
+        # slots that have hosted a request (their cache state is dirty and
+        # must be zeroed before reuse)
+        self._dirty = np.zeros(cfg.batch_slots, bool)
         self.stats = {"prefill_dispatches": 0, "decode_steps": 0}
 
     @staticmethod
@@ -144,7 +171,8 @@ class Engine:
         return jnp.asarray(host_state.copy())
 
     # ------------------------------------------------------------ prefill
-    def add_request(self, prompt: List[int]) -> int:
+    def add_request(self, prompt: List[int],
+                    eos_id: Optional[int] = None) -> int:
         """Prefill a free slot and return its id.
 
         Bucketed mode splits the prompt into ``prefill_bucket_max``-sized
@@ -152,6 +180,10 @@ class Engine:
         compiled dispatch per chunk — ``ceil(len / bucket_max)`` dispatches
         (never more than ``ceil(log2(len)) + 1`` for prompts that fit the
         context), vs ``len`` in legacy ``prefill_mode="token"``.
+
+        ``eos_id`` overrides ``cfg.eos_id`` for this request: the lane is
+        freed as soon as it emits that token (the EOS itself is kept in
+        ``tokens``), making the slot claimable by the next ``add_request``.
         """
         if not prompt:
             raise ValueError("empty prompt")
@@ -167,9 +199,14 @@ class Engine:
         if len(free) == 0:
             raise RuntimeError("no free slots")
         slot = int(free[0])
+        if self._dirty[slot]:
+            self._reset_slot_state(slot)
+        self._dirty[slot] = True
         self.tokens[slot] = list(prompt)
         self.lengths[slot] = 0
         self.active[slot] = True
+        eos = eos_id if eos_id is not None else self.cfg.eos_id
+        self._eos[slot] = -1 if eos is None else int(eos)
         if self.cfg.prefill_mode == "token":
             for t in prompt:
                 self._advance_slot(slot, t)
@@ -181,6 +218,26 @@ class Engine:
                 pos += len(chunk)
         self._last_host[slot] = prompt[-1]
         return slot
+
+    def _reset_slot_state(self, slot: int):
+        """Zero one lane's cache before a freed slot hosts a new request.
+
+        Attention KV is positionally overwritten and length-masked, so it
+        cannot leak — but RG-LRU/SSM recurrent states persist across the
+        request boundary and would seed the new prompt's prefill scan with
+        the previous occupant's state."""
+        def z(axis):
+            def f(a):
+                idx = [slice(None)] * a.ndim
+                idx[axis] = slot
+                return a.at[tuple(idx)].set(0)
+            return f
+        out = dict(self.cache)
+        if "superblocks" in out:
+            out["superblocks"] = jax.tree.map(z(1), out["superblocks"])
+        if "tail" in out:
+            out["tail"] = jax.tree.map(z(0), out["tail"])
+        self.cache = out
 
     def _bucket(self, n: int) -> int:
         b = self.cfg.prefill_bucket_min
@@ -219,16 +276,22 @@ class Engine:
         self.stats["prefill_dispatches"] += 1
 
     # ------------------------------------------------------------ decode
-    def step(self, key: Optional[jax.Array] = None) -> dict:
+    def step(self, key: Optional[jax.Array] = None) -> "StepResult":
         """One decode step for every active slot.
 
         The compiled decode returns only the sampled token ids; everything
         else (logits, cache merge, sampling) stays on device. Pass ``key``
         (and set ``temperature > 0``) for per-lane categorical sampling;
         greedy argmax otherwise.
+
+        Returns a ``StepResult`` (a dict of slot id -> token, exactly as
+        before) whose ``finished`` attribute lists the slots freed this
+        step — lanes that emitted their EOS or ran out of context. Freed
+        slots drop out of the active mask (their caches freeze inside the
+        fused decode) and are immediately claimable by ``add_request``.
         """
         if not self.active.any():
-            return {}
+            return StepResult({}, [])
         sample = self.cfg.temperature > 0 and key is not None
         fn = _decode_fn(self.arch, sample)
         ids_dev, self.cache = fn(
@@ -246,9 +309,15 @@ class Engine:
             out[int(s)] = t
         self._last_host[act] = ids[act]
         self.lengths[act] += 1
-        self.active[self.lengths >= self.cfg.max_ctx] = False
+        # Per-slot completion: emitted EOS, or no context left for another
+        # decode write. Either way the slot leaves the active mask (its
+        # cache freezes in the next fused decode) and is free to reuse.
+        hit_eos = (self._eos >= 0) & (self._last_host == self._eos)
+        done = self.active & (hit_eos | (self.lengths >= self.cfg.max_ctx))
+        finished = [int(s) for s in np.where(done)[0]]
+        self.active[done] = False
         self.stats["decode_steps"] += 1
-        return out
+        return StepResult(out, finished)
 
     @staticmethod
     def _fetch(ids_dev: jax.Array) -> np.ndarray:
@@ -258,24 +327,29 @@ class Engine:
 
 
 @functools.lru_cache(maxsize=64)
-def _energy_point(fmt_x, fmt_w, n_r, n_cols):
+def _energy_point(fmt_x, fmt_w, n_r, n_cols, seed):
     """Memoized ``evaluate_point``: the required-ENOB solve behind it runs
     a full Monte-Carlo per call, but is fully determined by the CIM design
-    knobs (the PRNG key is fixed), so repeated ``energy_report`` calls for
-    the same design are free."""
+    knobs *and the sampling configuration* — the RNG seed and the sample
+    count are part of the cache key, so a changed sampling setup can never
+    be served a stale memoized solve."""
     return evaluate_point(
-        jax.random.PRNGKey(0), fmt_x, fmt_w, n_r=n_r, n_cols=n_cols)
+        jax.random.PRNGKey(seed), fmt_x, fmt_w, n_r=n_r, n_cols=n_cols)
 
 
-def energy_report(arch: ArchConfig, seq_len: int = 1) -> dict:
+def energy_report(arch: ArchConfig, seq_len: int = 1, *,
+                  seed: int = 0, n_cols: int = 1 << 11) -> dict:
     """Per-token CIM energy (pJ) from the paper's cost model.
 
     Counts MACs of every projection matmul executed per decoded token and
     prices them at the config's design point (fJ/Op × 2 Ops/MAC).
+    ``seed``/``n_cols`` configure the underlying Monte-Carlo ENOB solve
+    (both participate in its memoization key).
     """
     if not arch.cim.enabled:
         return {"enabled": False}
-    pt = _energy_point(arch.cim.fmt_x, arch.cim.fmt_w, arch.cim.n_r, 1 << 11)
+    pt = _energy_point(arch.cim.fmt_x, arch.cim.fmt_w, arch.cim.n_r,
+                       n_cols, seed)
     gr = pt.gr if pt.gr is not None else pt.conv
     fj_per_op = gr.total
     macs = 0

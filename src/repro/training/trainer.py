@@ -44,14 +44,21 @@ class TrainConfig:
     ckpt_every: int = 50
     log_every: int = 10
     # GR-MAC backend override for CIM-enabled archs (None keeps the arch's
-    # CIMConfig.backend; see kernels.dispatch for the choices)
+    # CIMConfig.backend; see kernels.dispatch for the choices). Training
+    # batches are large-M matmuls, so "auto" plans onto the fused tiled
+    # backend; cim_tile_m / cim_tile_n pin its tile sizes when set.
     cim_backend: Optional[str] = None
+    cim_tile_m: Optional[int] = None
+    cim_tile_n: Optional[int] = None
     opt: OptimizerConfig = dataclasses.field(default_factory=OptimizerConfig)
 
 
 def make_train_step(arch: ArchConfig, tcfg: TrainConfig) -> Callable:
     if tcfg.cim_backend is not None:
         arch = arch.replace(cim=arch.cim.with_backend(tcfg.cim_backend))
+    if tcfg.cim_tile_m is not None or tcfg.cim_tile_n is not None:
+        arch = arch.replace(cim=arch.cim.with_tiles(
+            tcfg.cim_tile_m, tcfg.cim_tile_n))
     ocfg = tcfg.opt
     nmb = tcfg.microbatches
 

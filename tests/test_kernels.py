@@ -1,6 +1,7 @@
-"""GR-MAC backend cross-validation: fast XLA path vs the jnp oracle (exact),
-Pallas-interpret vs oracle (slow debug cross-check), dispatch resolution,
-and the model-facing cim_matmul op."""
+"""GR-MAC backend cross-validation: fast XLA path and fused tiled path vs
+the jnp oracle (exact), Pallas-interpret vs oracle (slow debug cross-check),
+plan-based dispatch (heuristic + autotune cache), and the model-facing
+cim_matmul op."""
 import jax
 import jax.numpy as jnp
 import numpy as np
@@ -8,10 +9,18 @@ import pytest
 
 from repro.core.cim_config import CIMConfig
 from repro.core.formats import FP4_E2M1, FP6_E3M2, FPFormat, quantize
-from repro.kernels.dispatch import BACKENDS, grmac_matmul, resolve_backend
+from repro.kernels.dispatch import (
+    BACKENDS,
+    Plan,
+    clear_plan_cache,
+    grmac_matmul,
+    plan_for,
+    resolve_backend,
+)
 from repro.kernels.grmac_matmul import grmac_matmul_pallas
 from repro.kernels.ops import cim_matmul
 from repro.kernels.ref import grmac_matmul_ref
+from repro.kernels.tiled import default_tile_m, grmac_matmul_tiled
 from repro.kernels.xla import bf16_products_exact, grmac_matmul_xla
 
 
@@ -60,6 +69,67 @@ def test_xla_backend_vmap_grad_safe():
     assert bool(jnp.all(jnp.isfinite(g)))
 
 
+# ------------------------------------------------------------- tiled path
+@pytest.mark.parametrize("granularity", ["conv", "row", "unit"])
+@pytest.mark.parametrize(
+    "m,k,n,tile_m,tile_n",
+    [
+        (128, 128, 128, 32, 0),      # tiles divide M, no N tiling
+        (100, 128, 96, 32, 0),       # tile_m does not divide M
+        (64, 128, 80, 16, 32),       # N tiling, divides
+        (64, 128, 80, 16, 24),       # N tiling, does not divide
+        (24, 128, 48, 256, 0),       # single tile larger than M
+    ],
+)
+def test_tiled_backend_matches_ref_exactly(granularity, m, k, n,
+                                           tile_m, tile_n):
+    """The fused tiled backend is bit-identical to the oracle at 0 ulp for
+    every granularity and for tile sizes that do and don't divide M/N."""
+    x, w = _data(jax.random.PRNGKey(21), m, k, n)
+    kw = dict(fmt_x=FP6_E3M2, fmt_w=FP4_E2M1, n_r=32, enob=8.0,
+              granularity=granularity)
+    ref = grmac_matmul_ref(x, w, **kw)
+    out = grmac_matmul_tiled(x, w, tile_m=tile_m, tile_n=tile_n, **kw)
+    np.testing.assert_array_equal(np.asarray(out), np.asarray(ref))
+
+
+@pytest.mark.parametrize("n_r", [8, 32, 128])
+def test_tiled_backend_n_r_edges(n_r):
+    """n_r from one block per row (n_r == K) down to many tiny columns."""
+    x, w = _data(jax.random.PRNGKey(22), 48, 128, 40)
+    for gran in ["conv", "row", "unit"]:
+        kw = dict(fmt_x=FP6_E3M2, fmt_w=FP4_E2M1, n_r=n_r, enob=8.0,
+                  granularity=gran)
+        ref = grmac_matmul_ref(x, w, **kw)
+        out = grmac_matmul_tiled(x, w, tile_m=16, **kw)
+        np.testing.assert_array_equal(np.asarray(out), np.asarray(ref))
+
+
+def test_tiled_backend_vmap_grad_safe():
+    x, w = _data(jax.random.PRNGKey(23), 32, 128, 16)
+    kw = dict(fmt_x=FP6_E3M2, fmt_w=FP4_E2M1, n_r=32, enob=8.0,
+              granularity="row")
+    vm = jax.vmap(lambda a: grmac_matmul_tiled(a, w, tile_m=8, **kw))(
+        jnp.stack([x, x * 0.5, -x]))
+    assert vm.shape == (3, 32, 16)
+    g = jax.grad(
+        lambda a: jnp.sum(grmac_matmul_tiled(a, w, tile_m=8, **kw) ** 2))(x)
+    assert g.shape == x.shape
+    assert bool(jnp.all(jnp.isfinite(g)))
+
+
+def test_tiled_through_dispatch_unpadded():
+    """dispatch pads K to n_r for the tiled backend exactly like xla/ref."""
+    x, w = _data(jax.random.PRNGKey(24), 70, 100, 13)
+    kw = dict(fmt_x=FP6_E3M2, fmt_w=FP4_E2M1, n_r=32, enob=8.0,
+              granularity="row")
+    ref = grmac_matmul(x, w, backend="ref", **kw)
+    out = grmac_matmul(x, w, backend="tiled", **kw)
+    tiny = grmac_matmul(x, w, backend="tiled", tile_m=16, tile_n=8, **kw)
+    np.testing.assert_array_equal(np.asarray(out), np.asarray(ref))
+    np.testing.assert_array_equal(np.asarray(tiny), np.asarray(ref))
+
+
 # ----------------------------------------------------- bf16 values variant
 @pytest.mark.parametrize("granularity", ["conv", "row", "unit"])
 def test_xla_bf16_values_matches_ref_exactly(granularity):
@@ -102,10 +172,13 @@ def test_xla_bf16_values_falls_back_for_wide_formats():
 
 
 # ---------------------------------------------------------------- dispatch
+_FMT_KW = dict(fmt_x=FP6_E3M2, fmt_w=FP4_E2M1)
+
+
 def test_dispatch_resolution(monkeypatch):
     monkeypatch.delenv("REPRO_GRMAC_BACKEND", raising=False)
-    auto = resolve_backend(None)
-    assert auto == ("pallas" if jax.default_backend() == "tpu" else "xla")
+    # "auto" stays symbolic at the name level; plan_for decides per shape
+    assert resolve_backend(None) == "auto"
     assert resolve_backend("ref") == "ref"
     monkeypatch.setenv("REPRO_GRMAC_BACKEND", "ref")
     assert resolve_backend(None) == "ref"
@@ -113,7 +186,70 @@ def test_dispatch_resolution(monkeypatch):
     assert resolve_backend("xla") == "xla"  # explicit beats env
     with pytest.raises(ValueError):
         resolve_backend("cuda")
-    assert set(BACKENDS) == {"auto", "xla", "pallas", "pallas_interpret", "ref"}
+    assert set(BACKENDS) == {"auto", "xla", "tiled", "pallas",
+                             "pallas_interpret", "ref"}
+
+
+def test_plan_heuristic_small_vs_large_m(monkeypatch):
+    """The static heuristic routes the deployment regimes: edge_decode
+    (16x768x3072) to the batched-einsum xla path, train_large_m
+    (2048x768x3072) to the fused tiled path (off-TPU)."""
+    if jax.default_backend() == "tpu":
+        pytest.skip("heuristic plans pallas on TPU")
+    monkeypatch.delenv("REPRO_GRMAC_BACKEND", raising=False)
+    monkeypatch.delenv("REPRO_GRMAC_AUTOTUNE", raising=False)
+    monkeypatch.setenv("REPRO_GRMAC_PLAN_CACHE", "/nonexistent/plans.json")
+    clear_plan_cache()
+    edge = plan_for(16, 768, 3072, granularity="row", **_FMT_KW)
+    train = plan_for(2048, 768, 3072, granularity="row", **_FMT_KW)
+    assert edge.backend == "xla"
+    assert train.backend == "tiled"
+    assert train.tile_m == default_tile_m(768, 3072, 32)
+    # explicit names always short-circuit the planner
+    assert plan_for(2048, 768, 3072, granularity="row", backend="ref",
+                    **_FMT_KW) == Plan("ref", source="fixed")
+    clear_plan_cache()
+
+
+def test_autotune_cache_round_trip(tmp_path, monkeypatch):
+    """REPRO_GRMAC_AUTOTUNE=1 probes an unknown shape once, persists the
+    winning plan to the JSON cache, and a fresh lookup (new in-memory
+    state, autotune off) serves the persisted plan instead of re-probing
+    or falling back to the heuristic."""
+    cache = tmp_path / "plans.json"
+    monkeypatch.setenv("REPRO_GRMAC_PLAN_CACHE", str(cache))
+    monkeypatch.setenv("REPRO_GRMAC_AUTOTUNE", "1")
+    monkeypatch.delenv("REPRO_GRMAC_BACKEND", raising=False)
+    clear_plan_cache()
+    probed = plan_for(96, 96, 64, granularity="row", **_FMT_KW)
+    assert probed.source == "autotune"
+    assert cache.exists()
+
+    clear_plan_cache()                      # drop memory, keep the file
+    monkeypatch.setenv("REPRO_GRMAC_AUTOTUNE", "0")
+    reloaded = plan_for(96, 96, 64, granularity="row", **_FMT_KW)
+    assert reloaded.source == "cache"
+    assert (reloaded.backend, reloaded.tile_m, reloaded.tile_n) == \
+        (probed.backend, probed.tile_m, probed.tile_n)
+    # a different shape/granularity is a different key -> heuristic again
+    other = plan_for(96, 96, 64, granularity="unit", **_FMT_KW)
+    assert other.source == "heuristic"
+    clear_plan_cache()
+
+
+def test_auto_dispatch_matches_ref_under_jit(monkeypatch):
+    """backend="auto" plans inside jit traces (no probing) and the planned
+    backend keeps the 0-ulp contract."""
+    monkeypatch.delenv("REPRO_GRMAC_BACKEND", raising=False)
+    monkeypatch.setenv("REPRO_GRMAC_AUTOTUNE", "1")  # must not probe in-trace
+    monkeypatch.setenv("REPRO_GRMAC_PLAN_CACHE", "/nonexistent/plans.json")
+    clear_plan_cache()
+    x, w = _data(jax.random.PRNGKey(25), 96, 96, 48)
+    kw = dict(n_r=32, enob=8.0, granularity="row", **_FMT_KW)
+    ref = grmac_matmul(x, w, backend="ref", **kw)
+    out = jax.jit(lambda a, b: grmac_matmul(a, b, backend="auto", **kw))(x, w)
+    np.testing.assert_array_equal(np.asarray(out), np.asarray(ref))
+    clear_plan_cache()
 
 
 def test_cim_matmul_backend_kwarg():

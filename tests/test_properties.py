@@ -12,6 +12,7 @@ from repro.core.cim_config import CIMConfig
 from repro.core import formats as F
 from repro.kernels.ops import cim_matmul
 from repro.kernels.ref import grmac_matmul_ref
+from repro.kernels.tiled import grmac_matmul_tiled
 
 
 @settings(max_examples=15, deadline=None)
@@ -45,6 +46,35 @@ def test_grmac_ideal_adc_equals_exact_quantized_product(seed, gran):
     ref = F.quantize(x, F.FP6_E3M2) @ w
     np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
                                rtol=2e-4, atol=2e-5)
+
+
+@settings(max_examples=25, deadline=None)
+@given(seed=st.integers(0, 1 << 30),
+       gran=st.sampled_from(["row", "unit", "conv"]),
+       m=st.integers(1, 70),
+       n=st.integers(1, 50),
+       blocks=st.integers(1, 4),
+       n_r=st.sampled_from([4, 8, 32, 96]),   # one element shy .. whole K
+       tile_m=st.sampled_from([1, 8, 13, 32, 256]),
+       tile_n=st.sampled_from([0, 8, 13]),
+       bf16=st.booleans())
+def test_tiled_bit_identical_to_ref(seed, gran, m, n, blocks, n_r,
+                                    tile_m, tile_n, bf16):
+    """The fused tiled backend is the oracle, bit for bit (0 ulp), across
+    granularities, tile sizes that do and don't divide M/N, n_r edge
+    values (one block per row through many narrow columns), and the bf16
+    values-einsum flag (FP6_E3M2 x FP4_E2M1 products are bf16-exact)."""
+    k = blocks * n_r
+    kx, kw_ = jax.random.split(jax.random.PRNGKey(seed))
+    x = jax.random.uniform(kx, (m, k), minval=-1, maxval=1)
+    w = F.quantize(jax.random.uniform(kw_, (k, n), minval=-1, maxval=1),
+                   F.FP4_E2M1)
+    kw = dict(fmt_x=F.FP6_E3M2, fmt_w=F.FP4_E2M1, n_r=n_r, enob=8.0,
+              granularity=gran)
+    ref = grmac_matmul_ref(x, w, **kw)
+    out = grmac_matmul_tiled(x, w, tile_m=tile_m, tile_n=tile_n,
+                             bf16_values=bf16, **kw)
+    np.testing.assert_array_equal(np.asarray(out), np.asarray(ref))
 
 
 @settings(max_examples=15, deadline=None)

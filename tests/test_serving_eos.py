@@ -1,0 +1,132 @@
+"""Per-slot EOS handling: a lane that emits its EOS frees its slot at that
+step (not at max_ctx), ``Engine.step`` reports the freed slots, and a freed
+slot is immediately claimable by ``add_request``.
+
+The sampled ids are scripted through ``Engine._fetch`` (the engine's single
+device->host transfer), so mixed-length completions are deterministic and
+independent of the untrained model's actual argmax stream — the test pins
+the engine's *bookkeeping*, which is what this feature adds."""
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.models import init_params
+from repro.serving.engine import Engine, ServeConfig, StepResult
+
+EOS = 7
+
+
+def _engine(batch_slots=3, max_ctx=32, **cfg_kw):
+    arch = get_config("qwen2-1.5b").reduced()
+    params = init_params(jax.random.PRNGKey(0), arch)
+    return Engine(arch, params,
+                  ServeConfig(batch_slots=batch_slots, max_ctx=max_ctx,
+                              **cfg_kw))
+
+
+def _script_fetch(monkeypatch, script):
+    """Replace the sampled ids of step t with ``script[t]`` (later steps
+    reuse the last row). The decode still runs; only the host-visible ids
+    are overridden."""
+    it = {"t": 0}
+
+    def fake_fetch(ids_dev):
+        row = script[min(it["t"], len(script) - 1)]
+        it["t"] += 1
+        return np.asarray(row, np.int32)
+
+    monkeypatch.setattr(Engine, "_fetch", staticmethod(fake_fetch))
+
+
+def test_mixed_length_batch_frees_slots_in_order(monkeypatch):
+    """Three lanes finishing at different steps must free their slots in
+    completion order, each exactly at its EOS step."""
+    eng = _engine()
+    for p in ([3, 1], [4, 1, 5], [9, 2]):
+        eng.add_request(p, eos_id=EOS)
+    # slot 0 hits EOS at step 1, slot 2 at step 2, slot 1 at step 3
+    _script_fetch(monkeypatch, [
+        [11, 12, 13],
+        [EOS, 14, 15],
+        [16, 17, EOS],
+        [18, EOS, 19],
+    ])
+    s0 = eng.step()
+    assert isinstance(s0, StepResult) and s0.finished == []
+    assert sorted(s0) == [0, 1, 2]
+
+    s1 = eng.step()
+    assert s1.finished == [0]
+    assert list(eng.active) == [False, True, True]
+    assert eng.tokens[0][-1] == EOS          # the EOS itself is kept
+
+    s2 = eng.step()
+    assert s2.finished == [2]
+    assert 0 not in s2                       # freed lane emits nothing
+    assert sorted(s2) == [1, 2]              # EOS step still reports the token
+
+    s3 = eng.step()
+    assert s3.finished == [1]
+    assert not eng.active.any()
+    assert eng.step() == {}                  # fully drained engine is a no-op
+
+
+def test_freed_slot_is_immediately_claimable(monkeypatch):
+    eng = _engine(batch_slots=2)
+    eng.add_request([3, 1, 4], eos_id=EOS)
+    eng.add_request([5, 9], eos_id=EOS)
+    _script_fetch(monkeypatch, [[EOS, 21], [22, 23]])
+    out = eng.step()
+    assert out.finished == [0]
+    assert eng.add_request([8, 8]) == 0      # the freed slot, immediately
+    assert list(eng.active) == [True, True]
+    with pytest.raises(RuntimeError):        # both lanes live again -> full
+        eng.add_request([1, 2])
+
+
+def test_config_level_eos_and_max_ctx_interplay(monkeypatch):
+    """cfg.eos_id applies to every request; lanes that never emit EOS still
+    free at max_ctx (the legacy completion path, now reported too)."""
+    eng = _engine(batch_slots=2, max_ctx=6, eos_id=EOS)
+    eng.add_request([1, 2])                  # cfg-level EOS
+    eng.add_request([3, 4], eos_id=10**9)    # per-request override: never hits
+    _script_fetch(monkeypatch, [[31, 41], [EOS, 42], [33, 43], [34, 44]])
+    assert eng.step().finished == []
+    assert eng.step().finished == [0]        # EOS from cfg default
+    assert eng.step().finished == []
+    assert eng.step().finished == [1]        # lengths: 2 prompt + 4 = max_ctx
+    assert not eng.active.any()
+
+
+def test_reused_slot_carries_no_state_from_previous_request():
+    """A recurrent-state arch (RG-LRU) must generate identically on a
+    reused slot and on a fresh engine: the previous occupant's recurrent
+    state is zeroed at claim time (attention KV alone is length-masked,
+    recurrent caches are not)."""
+    arch = get_config("recurrentgemma-9b").reduced()
+    params = init_params(jax.random.PRNGKey(0), arch)
+    cfg = ServeConfig(batch_slots=1, max_ctx=12)
+    prompt_b = [9, 8, 7]
+
+    fresh = Engine(arch, params, cfg)
+    slot = fresh.add_request(prompt_b)
+    want = [fresh.step()[slot] for _ in range(5)]
+
+    eng = Engine(arch, params, cfg)
+    eng.add_request([1, 2, 3, 4, 5])
+    while eng.active.any():                  # drain request A to max_ctx
+        eng.step()
+    slot = eng.add_request(prompt_b)         # reuse the freed slot
+    got = [eng.step()[slot] for _ in range(5)]
+    assert got == want
+
+
+def test_no_eos_keeps_legacy_behavior(monkeypatch):
+    """Without any EOS configured, lanes decode to max_ctx exactly as
+    before — and the context-exhaustion free is reported in finished."""
+    eng = _engine(batch_slots=1, max_ctx=5)
+    eng.add_request([1, 2, 3])
+    _script_fetch(monkeypatch, [[EOS]])      # EOS id emitted but not configured
+    assert eng.step().finished == []         # not finished: no EOS set
+    assert eng.step().finished == [0]        # 3 prompt + 2 decodes = max_ctx
