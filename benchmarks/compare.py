@@ -1,14 +1,19 @@
 """Bench-regression checker: fresh --smoke runs vs the committed records.
 
 Runs the smoke configuration of the bench scripts (kernel_bench,
-serve_bench), then walks the committed ``experiments/bench/*_smoke.json``
+serve_bench, e2e_energy), then walks the committed ``experiments/bench/*_smoke.json``
 records and compares every timing leaf against the fresh run at the same
 path:
 
 * ``warm_us`` / ``ttft_ms``  — time-like: fresh / committed > threshold
   (default 1.5x) is a regression;
 * ``decode_tok_s``           — throughput-like: committed / fresh >
-  threshold is a regression.
+  threshold is a regression;
+* ``ops_per_token`` / ``analog_ops_per_token`` (the e2e_energy op-count
+  leaves) — **exact**: these are deterministic ledger traces of the model
+  structure, so ANY drift from the committed record is a regression (the
+  models changed without the committed energy record being refreshed, or
+  the cost accounting broke).
 
 Cells faster than ``--min-us`` (default 300 us) in the committed record
 are skipped: at smoke sizes those measure pure dispatch overhead and are
@@ -40,17 +45,20 @@ from benchmarks.common import RESULTS_DIR
 
 # timing leaves: key -> True when larger-is-better (throughput)
 _TIME_KEYS = {"warm_us": False, "ttft_ms": False, "decode_tok_s": True}
+# deterministic leaves compared with exact equality (op-count drift gate)
+_EXACT_KEYS = ("ops_per_token", "analog_ops_per_token")
 # committed-value scale to microseconds, for the noise floor
 _TO_US = {"warm_us": 1.0, "ttft_ms": 1e3}
 
-_BENCHES = ("kernel", "serve")
+_BENCHES = ("kernel", "serve", "energy")
 
 
 def _walk(tree, path=()):
     if isinstance(tree, dict):
         for k, v in tree.items():
             yield from _walk(v, path + (k,))
-    elif isinstance(tree, (int, float)) and path and path[-1] in _TIME_KEYS:
+    elif isinstance(tree, (int, float)) and path and (
+            path[-1] in _TIME_KEYS or path[-1] in _EXACT_KEYS):
         yield path, float(tree)
 
 
@@ -70,10 +78,20 @@ def compare(committed: dict, fresh: dict, *, threshold: float = 1.5,
         if "pallas_interpret" in path:
             continue  # debug interpreter: not a guarded hot path
         key = path[-1]
+        got = _lookup(fresh, path)
+        if key in _EXACT_KEYS:
+            # deterministic structure counts: any drift is a regression,
+            # including the leaf disappearing from the fresh record
+            if got is None or got != want:
+                regressions.append(
+                    f"{label}{'/'.join(path)}: op count {want:.6g} -> "
+                    f"{'missing' if got is None else f'{got:.6g}'} "
+                    "(exact-match leaf; models and committed energy "
+                    "record disagree)")
+            continue
         us = want * _TO_US.get(key, 0.0)
         if not _TIME_KEYS[key] and us < min_us:
             continue  # dispatch-overhead noise at smoke sizes
-        got = _lookup(fresh, path)
         if got is None or got <= 0 or want <= 0:
             continue  # shape/backend set changed; absence is not slowness
         ratio = (want / got) if _TIME_KEYS[key] else (got / want)
@@ -130,6 +148,9 @@ def _fresh_run(bench: str):
     if bench == "kernel":
         from benchmarks import kernel_bench
         return kernel_bench.run(smoke=True)
+    if bench == "energy":
+        from benchmarks import e2e_energy
+        return e2e_energy.run(**e2e_energy.SMOKE_PARAMS)
     from benchmarks import serve_bench
     return serve_bench.run(**serve_bench.SMOKE_PARAMS)
 
@@ -144,8 +165,10 @@ def run(benches=_BENCHES, threshold=1.5, min_us=300.0, fresh=True) -> list:
     baseline without running anything (for use after separate smoke
     steps)."""
     regressions = []
+    names = {"kernel": "kernel_bench_smoke", "serve": "serve_bench_smoke",
+             "energy": "e2e_energy_smoke"}
     for bench in benches:
-        name = "kernel_bench_smoke" if bench == "kernel" else "serve_bench_smoke"
+        name = names[bench]
         committed = _committed(name)
         new = _fresh_run(bench) if fresh else _on_disk(name)
         found = compare(committed, new, threshold=threshold, min_us=min_us,
@@ -166,8 +189,8 @@ def main() -> None:
                     help="warm-time ratio above which a cell is a regression")
     ap.add_argument("--min-us", type=float, default=300.0,
                     help="skip committed cells faster than this (noise floor)")
-    ap.add_argument("--bench", default="kernel,serve",
-                    help="comma list: kernel,serve")
+    ap.add_argument("--bench", default="kernel,serve,energy",
+                    help="comma list: kernel,serve,energy")
     ap.add_argument("--no-run", action="store_true",
                     help="compare records already on disk instead of "
                          "running fresh --smoke benches")

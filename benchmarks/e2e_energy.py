@@ -1,26 +1,72 @@
-"""End-to-end deployment metric: per-token CIM energy for the paper's
-edge config and for each assigned architecture under the GR-CIM vs the
-conventional CIM design point (the paper's bottom-line deployment win)."""
-from repro.configs import get_config
+"""End-to-end deployment metric: ledger-derived per-token CIM energy for
+every registered architecture, per phase (prefill / decode / train).
+
+The per-arch reports come from ``serving.engine.energy_report``, i.e. from
+``core.costs`` shape-only traces of the real model functions — no analytic
+MAC census. Each arch record carries, per phase, the op counts and the
+pJ/token under the arch's (per-site) CIM design next to the conventional
+CIM pricing of the same ops — the paper's bottom-line deployment win.
+
+``--smoke`` writes the separate ``e2e_energy_smoke.json`` record with a
+reduced Monte-Carlo sample count; the committed copy is compared by
+``benchmarks/compare.py`` with **exact integer equality on the op-count
+leaves** — any drift between the models and the energy accounting fails
+the build (timing gates don't apply here: op counts are deterministic).
+
+Run:  PYTHONPATH=src python -m benchmarks.e2e_energy [--smoke]
+"""
+import argparse
+
+from repro.configs import get_config, list_configs
 from repro.serving.engine import energy_report
 from benchmarks.common import emit, save_json
 
-ARCHS = ["paper-cim-120m", "qwen2-1.5b", "gemma3-1b", "mamba2-1.3b"]
+# the one smoke configuration: shared by the --smoke CLI (which refreshes
+# the committed e2e_energy_smoke.json) and benchmarks/compare.py's fresh
+# run, so the op-count gate always compares like-for-like configs
+SMOKE_PARAMS = dict(n_cols=1 << 8, prefill_bucket=64,
+                    record="e2e_energy_smoke")
 
 
-def run():
+def run(archs=None, n_cols=1 << 11, prefill_bucket=128,
+        record="e2e_energy"):
     out = {}
-    for name in ARCHS:
+    for name in archs or list_configs():
         cfg = get_config(name)
         if not cfg.cim.enabled:
             cfg = cfg.replace(cim=cfg.cim.with_mode("grmac"))
-        rep = energy_report(cfg)
-        out[name] = rep
+        rep = energy_report(cfg, n_cols=n_cols,
+                            prefill_bucket=prefill_bucket)
+        out[name] = {
+            "pj_per_token": rep["pj_per_token"],
+            "fj_per_op": rep["fj_per_op"],
+            "conventional_fj_per_op": rep["conventional_fj_per_op"],
+            "phases": {
+                phase: {
+                    # integer op counts: the drift gate (exact compare)
+                    "ops_per_token": ph["ops_per_token"],
+                    "analog_ops_per_token": ph["analog_ops_per_token"],
+                    "pj_per_token": ph["pj_per_token"],
+                    "conventional_pj_per_token":
+                        ph["conventional_pj_per_token"],
+                }
+                for phase, ph in rep["phases"].items()
+            },
+        }
         emit(f"e2e/{name}", 0.0,
-             f"pj_per_token={rep['pj_per_token']:.1f};fj_per_op={rep['fj_per_op']:.1f}")
-    save_json("e2e_energy", out)
+             f"pj_per_token={rep['pj_per_token']:.1f}"
+             f";fj_per_op={rep['fj_per_op']:.1f}")
+    save_json(record, out)
     return out
 
 
 if __name__ == "__main__":
-    run()
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny Monte-Carlo + separate record for the CI "
+                         "op-count drift gate")
+    args = ap.parse_args()
+    if args.smoke:
+        run(**SMOKE_PARAMS)
+    else:
+        run()

@@ -24,6 +24,7 @@ import jax
 import numpy as np
 
 from repro.configs import get_config
+from repro.core import costs
 from repro.models import init_params
 from repro.serving.engine import Engine, ServeConfig
 from benchmarks.common import emit, save_json
@@ -80,6 +81,14 @@ def bench_arch(name, prompt_len, steps, slots, ctx, trials=3):
              f"tok_s={tok_s:.0f}"
              f";dispatches={eng.stats['prefill_dispatches']}")
     res["ttft_speedup"] = res["token"]["ttft_ms"] / res["bucketed"]["ttft_ms"]
+    # deployment energy next to the latency figures: decode-phase pJ per
+    # generated token of this arch under the GR-CIM path (ledger-derived;
+    # the benchmark engines themselves serve with CIM off, so the timing
+    # numbers measure the digital hot path, not the simulator)
+    cim_arch = arch if arch.cim.enabled else arch.replace(
+        cim=arch.cim.with_mode("grmac"))
+    res["pj_per_token"] = costs.price_ledger(
+        costs.trace_decode(cim_arch), 1, n_cols=1 << 8)["pj_per_token"]
     return res
 
 
@@ -98,14 +107,15 @@ def run(prompt_len=64, steps=32, slots=4, ctx=256, archs=None,
     out["ttft_speedup_geomean"] = float(np.exp(np.mean(np.log(ups))))
 
     print(f"\n{'arch':<8} {'ttft token(ms)':>15} {'ttft bucketed(ms)':>18} "
-          f"{'speedup':>8} {'dispatches':>11} {'tok/s':>8}")
+          f"{'speedup':>8} {'dispatches':>11} {'tok/s':>8} {'pJ/tok':>10}")
     for label, a in out["archs"].items():
         print(f"{label:<8} {a['token']['ttft_ms']:>15.1f} "
               f"{a['bucketed']['ttft_ms']:>18.1f} "
               f"{a['ttft_speedup']:>7.1f}x "
               f"{a['token']['prefill_dispatches']:>4}->"
               f"{a['bucketed']['prefill_dispatches']:<5} "
-              f"{a['bucketed']['decode_tok_s']:>8.0f}")
+              f"{a['bucketed']['decode_tok_s']:>8.0f} "
+              f"{a['pj_per_token']:>10.1f}")
     print(f"geomean TTFT speedup (bucketed vs token): "
           f"{out['ttft_speedup_geomean']:.1f}x")
     save_json(record, out)

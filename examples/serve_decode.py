@@ -33,10 +33,13 @@ def main():
             print(f"  step {step}: {out}")
     print("generated:", {s: eng.tokens[s][-8:] for s in (s0, s1)})
 
-    rep = energy_report(arch)
-    print(f"CIM energy: {rep['fj_per_op']:.1f} fJ/Op "
-          f"({rep['design']}) -> {rep['pj_per_token']/1e3:.2f} nJ/token "
+    rep = energy_report(arch)   # ledger-derived: traced from the model
+    print(f"CIM energy: {rep['fj_per_op']:.1f} fJ/Op -> "
+          f"{rep['pj_per_token']/1e3:.2f} nJ/token decoded "
           f"(conventional CIM: {rep['conventional_fj_per_op']:.1f} fJ/Op)")
+    for site, s in rep["sites"].items():
+        print(f"  {site:10s} {s['granularity']:5s} "
+              f"{s['pj_per_token']:10.1f} pJ/token")
 
 
 if __name__ == "__main__":

@@ -13,9 +13,33 @@ grmac      full GR-MAC signal-chain simulation: per-K-block mantissa
            accumulation, ADC quantization at the configured ENOB, digital
            renormalization. Deployment-faithful inference numerics.
 
-``granularity`` selects the paper's normalization domain (§III-C); ``n_r``
-is the CIM array depth, i.e. the K-block over which one analog accumulation
-+ one ADC conversion happens.
+``granularity`` selects the paper's normalization domain (§III-C): "row",
+"unit", or "conv" (the conventional CIM, no gain ranging); ``n_r`` is the
+CIM array depth, i.e. the K-block over which one analog accumulation + one
+ADC conversion happens.
+
+Per-site policy
+---------------
+Every projection matmul in the models carries a **site** label (see
+``SITES``): attention QKV vs output projections, the dense MLP, the MoE
+router and expert stacks, the SSM and RG-LRU projection heads, and the LM
+head. Which design runs at a site is resolved by ``for_site``:
+
+1. ``site_overrides`` — a tuple of ``(site, override)`` pairs where the
+   override is either the string ``"off"`` (digital at that site) or a
+   ``SiteDesign`` whose non-None fields replace the base design. This is
+   the first-class mixed-deployment knob: e.g. a conventional-CIM LM head
+   next to a gr-row FFN is
+   ``cim.override_site("head", SiteDesign(granularity="conv"))``.
+2. otherwise the legacy coarse switch: the site's *family* (``qkvo`` /
+   ``ffn`` / ``expert`` / ``head``) must be in ``apply_to``. ``apply_to``
+   is therefore a degenerate case of the override map (family-level
+   on/off with the one base design).
+
+``for_site`` returns a plain resolved ``CIMConfig`` (no overrides left),
+which is what ``cim_matmul`` executes and what ``core.costs`` records into
+the ``CostLedger`` — so energy pricing and numerics can never disagree
+about which design a site runs.
 
 ``backend`` picks the grmac execution backend (see ``kernels.dispatch``):
 "auto" (shape-aware plan: batched-einsum XLA path at small/decode M, fused
@@ -29,17 +53,72 @@ pin the tiled/Pallas tile sizes (None lets the plan decide).
 from __future__ import annotations
 
 import dataclasses
-from typing import Optional
+import functools
+from typing import Optional, Tuple, Union
 
 from .formats import FP4_E2M1, FP6_E3M2, FPFormat
 
-__all__ = ["CIMConfig"]
+__all__ = ["CIMConfig", "SiteDesign", "SITES", "site_family"]
+
+
+# Canonical matmul-site labels threaded from the model layers into
+# ``cim_matmul`` (and from there into core.costs.CostLedger). The legacy
+# family names ("qkvo", "ffn", "expert", "head") are also accepted as sites
+# for external callers of ``dense``.
+SITES = (
+    "attn_qkv",     # attention wq/wk/wv projections
+    "attn_o",       # attention output projection
+    "mlp",          # dense MLP (wi / wg / wo), incl. MoE dense residual
+    "moe_router",   # MoE router logits
+    "moe_expert",   # MoE expert stacks (wi / wg / wo)
+    "rglru",        # RG-LRU in/gate/out projections
+    "ssm",          # Mamba2 in/bc/dt/out projections
+    "head",         # LM head (tied or untied)
+)
+
+_SITE_FAMILY = {
+    "attn_qkv": "qkvo",
+    "attn_o": "qkvo",
+    "mlp": "ffn",
+    "moe_router": "expert",
+    "moe_expert": "expert",
+    "rglru": "qkvo",
+    "ssm": "qkvo",
+    "head": "head",
+    # legacy family names double as sites (identity mapping)
+    "qkvo": "qkvo",
+    "ffn": "ffn",
+    "expert": "expert",
+}
+
+
+def site_family(site: str) -> str:
+    """The coarse ``apply_to`` family a site belongs to."""
+    return _SITE_FAMILY.get(site, site)
+
+
+@dataclasses.dataclass(frozen=True)
+class SiteDesign:
+    """A per-site design override: non-None fields replace the base
+    ``CIMConfig`` fields at that site (see ``CIMConfig.for_site``)."""
+
+    mode: Optional[str] = None          # off | fakequant | grmac
+    granularity: Optional[str] = None   # row | unit | conv
+    fmt_x: Optional[FPFormat] = None
+    fmt_w: Optional[FPFormat] = None
+    n_r: Optional[int] = None
+    enob: Optional[float] = None
+
+    def as_kwargs(self) -> dict:
+        return {f.name: getattr(self, f.name)
+                for f in dataclasses.fields(self)
+                if getattr(self, f.name) is not None}
 
 
 @dataclasses.dataclass(frozen=True)
 class CIMConfig:
     mode: str = "off"                  # off | fakequant | grmac
-    granularity: str = "row"           # row | unit
+    granularity: str = "row"           # row | unit | conv
     fmt_x: FPFormat = FP6_E3M2
     fmt_w: FPFormat = FP4_E2M1
     n_r: int = 32                      # CIM array rows == matmul K-block
@@ -51,12 +130,18 @@ class CIMConfig:
     # running absmax before quantization (standard PTQ practice); the scale
     # is folded back after the MAC.
     dynamic_prescale: bool = True
-    # Apply the CIM path to these matmul families.
+    # Legacy coarse policy: apply the CIM path to these matmul families.
+    # Consulted only for sites without an entry in ``site_overrides``.
     apply_to: tuple = ("ffn", "qkvo", "expert", "head")
+    # First-class per-site policy: ((site, "off" | SiteDesign), ...).
+    # Resolved by ``for_site``; wins over ``apply_to``.
+    site_overrides: Tuple[Tuple[str, Union[str, SiteDesign]], ...] = ()
 
     @property
     def enabled(self) -> bool:
-        return self.mode != "off"
+        return self.mode != "off" or any(
+            ov != "off" and ov.mode not in (None, "off")
+            for _, ov in self.site_overrides)
 
     def resolved_enob(self) -> float:
         if self.enob is not None:
@@ -68,6 +153,33 @@ class CIMConfig:
         # at N_R = 32 with margin.
         return 8.0
 
+    # ------------------------------------------------------------ policy
+    def for_site(self, site: Optional[str]) -> "CIMConfig":
+        """Resolve the design that runs at ``site``.
+
+        Returns a plain CIMConfig with ``site_overrides`` cleared: an
+        ``"off"`` override (or a family absent from ``apply_to``) resolves
+        to ``mode="off"``; a ``SiteDesign`` override replaces its non-None
+        fields. ``site=None`` means "already resolved" (external callers
+        of ``cim_matmul`` that pass a finished design).
+        """
+        if site is None:
+            return self
+        return _resolve_site(self, site)
+
+    def override_site(
+        self, site: str, design: Union[str, SiteDesign]
+    ) -> "CIMConfig":
+        """Return a config with ``site`` overridden (replacing any existing
+        entry for the same site). ``design`` is ``"off"`` or a SiteDesign."""
+        if design != "off" and not isinstance(design, SiteDesign):
+            raise TypeError(f"override must be 'off' or SiteDesign, "
+                            f"got {design!r}")
+        kept = tuple((s, d) for s, d in self.site_overrides if s != site)
+        return dataclasses.replace(
+            self, site_overrides=kept + ((site, design),))
+
+    # ------------------------------------------------------------ sugar
     def with_mode(self, mode: str) -> "CIMConfig":
         return dataclasses.replace(self, mode=mode)
 
@@ -77,3 +189,17 @@ class CIMConfig:
     def with_tiles(self, tile_m: Optional[int],
                    tile_n: Optional[int] = None) -> "CIMConfig":
         return dataclasses.replace(self, tile_m=tile_m, tile_n=tile_n)
+
+
+@functools.lru_cache(maxsize=4096)
+def _resolve_site(cfg: CIMConfig, site: str) -> CIMConfig:
+    base = (dataclasses.replace(cfg, site_overrides=())
+            if cfg.site_overrides else cfg)
+    ov = next((d for s, d in cfg.site_overrides if s == site), None)
+    if ov is not None:
+        if ov == "off":
+            return dataclasses.replace(base, mode="off")
+        return dataclasses.replace(base, **ov.as_kwargs())
+    if site_family(site) in cfg.apply_to:
+        return base
+    return dataclasses.replace(base, mode="off")

@@ -1,0 +1,377 @@
+"""Trace-derived CIM cost accounting: the ``CostLedger`` subsystem.
+
+Why a ledger instead of a formula
+---------------------------------
+The paper's bottom line is an *energy* claim (the GR-MAC holds ADC energy
+flat while gaining dynamic range), so the end-to-end numbers must count the
+MACs the models actually execute. The previous ``energy_report`` re-derived
+every architecture's structure by hand (an analytic MAC census over
+``arch.blocks()``) and priced all sites at one design point — drift-prone
+(any model change silently invalidated it) and blind to the differences
+between prefill, decode and train, and between per-site designs.
+
+This module replaces the census with *structural* accounting:
+
+1. every projection matmul in the models carries a **site** label
+   (``core.cim_config.SITES``) threaded through ``kernels.ops.cim_matmul``;
+2. a shape-only ``jax.eval_shape`` trace of the *real* model functions —
+   ``models.prefill_step`` (per bucket), ``models.decode_step``, and the
+   ``models.train_loss`` grad step — runs under ``recording(ledger)``;
+   every ``cim_matmul`` call (and the MoE expert stacks, see below) then
+   records ``(site, M, K, N, mode, granularity, fmt_x, fmt_w, n_r)`` into
+   the active ``CostLedger``. Nothing is compiled or allocated: the trace
+   is abstract, parameters and caches come from ``jax.eval_shape`` of
+   ``init_params`` / ``init_cache``, and traces run with
+   ``scan_layers=False`` so every layer's calls are counted exactly once
+   (a ``lax.scan`` body would trace — and record — once for *n* layers).
+3. pricing multiplies each entry's op count by the fJ/Op of *that site's
+   resolved design* (``CIMConfig.for_site``), solved by the paper's
+   Monte-Carlo required-ENOB model — so mixed per-site deployments
+   (``CIMConfig.site_overrides``) price correctly, and the energy numbers
+   are structurally un-driftable from the models: change a projection
+   width, add a block, re-route a tensor, and the ledger follows.
+
+Accounting conventions
+----------------------
+* Counts are **logical** MACs. Two places diverge from physical buffer
+  shapes: the MoE expert stacks record ``tokens × top_k`` rows (the routed
+  assignments) rather than the fixed-capacity ``E × cap`` dispatch buffer,
+  and the LM head records the true ``vocab_size`` columns rather than the
+  256-aligned ``padded_vocab`` (pad columns are masked and would not be
+  mapped onto an analog array). Both conventions match the retired census,
+  which the cross-check test (tests/test_costs.py) pins exactly.
+* Sites whose resolved design is ``mode="off"`` are still recorded (they
+  are real matmuls) but price as digital — zero *analog* energy. The
+  report keeps digital and analog op counts separate.
+* The STE backward of ``cim_matmul`` is an exact digital matmul by
+  construction, so a train-step trace records the *forward* analog ops
+  only: that is what hits the array; the backward is digital by design.
+
+Entry points
+------------
+``trace_decode`` / ``trace_prefill`` / ``trace_train``  build ledgers;
+``price_ledger``  turns a ledger into a per-site / per-token energy report;
+``phase_report``  runs all three phases for one arch (what
+``serving.engine.energy_report`` and ``benchmarks/e2e_energy.py`` print).
+"""
+from __future__ import annotations
+
+import contextlib
+import dataclasses
+import functools
+from typing import Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .adc import required_enob
+from .cim_config import CIMConfig
+from .distributions import uniform
+from .energy import CimDesign, TechParams, energy_per_op_fj
+from .formats import FPFormat, IntFormat
+
+__all__ = [
+    "LedgerEntry",
+    "CostLedger",
+    "recording",
+    "record_matmul",
+    "trace_decode",
+    "trace_prefill",
+    "trace_train",
+    "design_energy_fj",
+    "price_ledger",
+    "phase_report",
+]
+
+_GRAN_ARCH = {"row": "gr_row", "unit": "gr_unit", "conv": "conv"}
+
+
+# ------------------------------------------------------------------ ledger
+@dataclasses.dataclass(frozen=True)
+class LedgerEntry:
+    """One distinct matmul contract: a site executing (M, K) @ (K, N)
+    under a resolved CIM design. The ledger maps entries to call counts."""
+
+    site: str
+    m: int
+    k: int
+    n: int
+    mode: str                # off | fakequant | grmac
+    granularity: str         # row | unit | conv
+    fmt_x: FPFormat
+    fmt_w: FPFormat
+    n_r: int
+
+    @property
+    def macs(self) -> int:
+        return self.m * self.k * self.n
+
+    @property
+    def analog(self) -> bool:
+        """Does this contract hit the analog array at deployment?
+        ``fakequant`` counts: it is the QAT stand-in for ``grmac``."""
+        return self.mode != "off"
+
+    def design_key(self) -> tuple:
+        return (self.granularity, self.fmt_x, self.fmt_w, self.n_r)
+
+
+class CostLedger:
+    """Counts of matmul contracts executed by one traced step."""
+
+    def __init__(self):
+        self._counts: Dict[LedgerEntry, int] = {}
+
+    def add(self, entry: LedgerEntry, count: int = 1) -> None:
+        self._counts[entry] = self._counts.get(entry, 0) + count
+
+    def merge(self, other: "CostLedger", times: int = 1) -> "CostLedger":
+        for e, c in other._counts.items():
+            self.add(e, c * times)
+        return self
+
+    def entries(self) -> List[Tuple[LedgerEntry, int]]:
+        return sorted(self._counts.items(),
+                      key=lambda ec: (ec[0].site, ec[0].m, ec[0].k, ec[0].n))
+
+    def macs(self, site: Optional[str] = None,
+             analog_only: bool = False) -> int:
+        return sum(e.macs * c for e, c in self._counts.items()
+                   if (site is None or e.site == site)
+                   and (not analog_only or e.analog))
+
+    def sites(self) -> List[str]:
+        return sorted({e.site for e in self._counts})
+
+    def __len__(self) -> int:
+        return len(self._counts)
+
+    def as_dict(self) -> list:
+        """JSON-able dump (formats by name), sorted for stable records."""
+        return [
+            {"site": e.site, "m": e.m, "k": e.k, "n": e.n, "count": c,
+             "mode": e.mode, "granularity": e.granularity,
+             "fmt_x": e.fmt_x.name, "fmt_w": e.fmt_w.name, "n_r": e.n_r}
+            for e, c in self.entries()
+        ]
+
+
+# ----------------------------------------------------------- record hooks
+_ACTIVE: List[CostLedger] = []
+
+
+@contextlib.contextmanager
+def recording(ledger: CostLedger):
+    """Route every ``cim_matmul`` (and explicit ``record_matmul``) executed
+    inside the block into ``ledger``. Shapes are read at Python level, so
+    this works identically under ``jax.eval_shape``."""
+    _ACTIVE.append(ledger)
+    try:
+        yield ledger
+    finally:
+        _ACTIVE.pop()
+
+
+def record_matmul(site: Optional[str], m: int, k: int, n: int,
+                  cfg: Optional[CIMConfig]) -> None:
+    """Record one (M, K) @ (K, N) contract at ``site`` under the *resolved*
+    design ``cfg`` (None = plain digital matmul). No-op unless a
+    ``recording`` context is active — the hot path pays one list check."""
+    if not _ACTIVE:
+        return
+    if cfg is None:
+        cfg = CIMConfig(mode="off")
+    _ACTIVE[-1].add(LedgerEntry(
+        site=site or "unsited", m=int(m), k=int(k), n=int(n),
+        mode=cfg.mode, granularity=cfg.granularity,
+        fmt_x=cfg.fmt_x, fmt_w=cfg.fmt_w, n_r=cfg.n_r))
+
+
+# ------------------------------------------------------------------ traces
+def _trace_arch(arch):
+    # scan_layers=False: cost accounting (like jax cost_analysis) must see
+    # every layer's calls, not one scan body per super-block stack.
+    # remat=False: jax.checkpoint memoizes tracing per abstract signature,
+    # so a rematted layer stack would fire the Python-level record hook
+    # once for N identical layers (and the trace allocates nothing anyway).
+    return arch.replace(scan_layers=False, remat=False)
+
+
+def _abstract_params(arch):
+    key = jax.ShapeDtypeStruct((2,), jnp.uint32)
+    from repro.models import init_params  # lazy: models import kernels.ops
+    return jax.eval_shape(lambda k: init_params(k, arch), key)
+
+
+def _abstract_cache(arch, batch: int, ctx: int):
+    from repro.models import init_cache
+    return jax.eval_shape(
+        lambda: init_cache(arch, batch, ctx, jnp.float32))
+
+
+def _token_struct(arch, batch: int, seq: int):
+    if arch.input_mode == "tokens":
+        return jax.ShapeDtypeStruct((batch, seq), jnp.int32)
+    return jax.ShapeDtypeStruct((batch, seq, arch.d_model), jnp.float32)
+
+
+def trace_decode(arch, batch: int = 1, ctx: int = 128) -> CostLedger:
+    """Ledger of ONE decode step over ``batch`` lanes (→ ``batch`` tokens)."""
+    from repro.models import decode_step
+    arch = _trace_arch(arch)
+    params = _abstract_params(arch)
+    cache = _abstract_cache(arch, batch, ctx)
+    idx = jax.ShapeDtypeStruct((batch,), jnp.int32)
+    ledger = CostLedger()
+    with recording(ledger):
+        jax.eval_shape(
+            lambda p, t, c, i: decode_step(p, t, arch, c, i),
+            params, _token_struct(arch, batch, 1), cache, idx)
+    return ledger
+
+
+def trace_prefill(arch, bucket: int = 128, batch: int = 1,
+                  ctx: Optional[int] = None) -> CostLedger:
+    """Ledger of one bucketed prefill dispatch of ``bucket`` tokens per
+    lane (→ ``batch * bucket`` tokens)."""
+    from repro.models import prefill_step
+    arch = _trace_arch(arch)
+    ctx = ctx or max(2 * bucket, 128)
+    params = _abstract_params(arch)
+    cache = _abstract_cache(arch, batch, ctx)
+    idx = jax.ShapeDtypeStruct((batch,), jnp.int32)
+    lens = jax.ShapeDtypeStruct((batch,), jnp.int32)
+    ledger = CostLedger()
+    with recording(ledger):
+        jax.eval_shape(
+            lambda p, t, c, i, l: prefill_step(p, t, arch, c, i, l),
+            params, _token_struct(arch, batch, bucket), cache, idx, lens)
+    return ledger
+
+
+def trace_train(arch, batch: int = 1,
+                seq_len: Optional[int] = None) -> CostLedger:
+    """Ledger of one train-step *forward* (value_and_grad traced; the STE
+    backward is digital, see module docstring) over ``batch × seq_len``
+    tokens."""
+    from repro.models import train_loss
+    arch = _trace_arch(arch)
+    if seq_len is None:
+        seq_len = max(arch.ssm_chunk, 128) if "ssm" in arch.block_pattern \
+            else 128
+    labels = jax.ShapeDtypeStruct((batch, seq_len), jnp.int32)
+    params = _abstract_params(arch)
+    ledger = CostLedger()
+
+    def step(p, inputs, lbl):
+        (total, _), grads = jax.value_and_grad(
+            lambda pp: train_loss(pp, {"inputs": inputs, "labels": lbl},
+                                  arch), has_aux=True)(p)
+        return total, grads
+
+    with recording(ledger):
+        jax.eval_shape(step, params,
+                       _token_struct(arch, batch, seq_len), labels)
+    return ledger
+
+
+# ----------------------------------------------------------------- pricing
+def _narrowest_uniform(fmt):
+    if isinstance(fmt, IntFormat):
+        return uniform(1.0)
+    return uniform(min(1.0, 2.0 * fmt.min_normal))
+
+
+@functools.lru_cache(maxsize=256)
+def design_energy_fj(granularity: str, fmt_x, fmt_w, n_r: int, *,
+                     n_cols: int = 1 << 11, seed: int = 0,
+                     n_c: int = 32) -> dict:
+    """fJ/Op of one (granularity, formats, n_r) design and of the
+    conventional CIM processing the same tensors — the paper's §IV cost
+    model behind both. The required-ENOB Monte-Carlo is memoized per
+    design *and* per sampling configuration (seed, n_cols), so a changed
+    sampling setup can never be served a stale solve."""
+    key = jax.random.PRNGKey(seed)
+    dist = _narrowest_uniform(fmt_x)
+    arch = _GRAN_ARCH[granularity]
+    solver = "conv" if arch == "conv" else arch
+    res = required_enob(key, solver, dist, fmt_x, n_r=n_r, fmt_w=fmt_w,
+                        n_cols=n_cols)
+    e = energy_per_op_fj(CimDesign(arch, fmt_x, fmt_w, res.enob, n_r, n_c),
+                         TechParams())
+    res_c = required_enob(key, "conv", dist, fmt_x, n_r=n_r, fmt_w=fmt_w,
+                          n_cols=n_cols)
+    e_c = energy_per_op_fj(
+        CimDesign("conv", fmt_x, fmt_w, res_c.enob, n_r, n_c), TechParams())
+    return {
+        "arch": arch,
+        "fj_per_op": e.total,
+        "enob": float(res.enob),
+        "breakdown": e.as_dict(),
+        "conv_fj_per_op": e_c.total,
+        "conv_enob": float(res_c.enob),
+    }
+
+
+def price_ledger(ledger: CostLedger, tokens: int, *,
+                 seed: int = 0, n_cols: int = 1 << 11) -> dict:
+    """Price ``ledger × energy_per_op_fj(site design)`` and normalize by
+    ``tokens``. Digital (mode "off") sites contribute op counts but no
+    analog energy; pJ/token sums over analog sites only."""
+    sites: Dict[str, dict] = {}
+    pj_total = 0.0
+    pj_conv = 0.0
+    analog_ops = 0
+    for entry, count in ledger.entries():
+        ops = 2 * entry.macs * count
+        s = sites.setdefault(entry.site, {
+            "ops_per_token": 0.0, "analog_ops_per_token": 0.0,
+            "pj_per_token": 0.0, "mode": entry.mode,
+            "granularity": entry.granularity, "fmt_x": entry.fmt_x.name,
+            "fmt_w": entry.fmt_w.name, "n_r": entry.n_r,
+        })
+        s["ops_per_token"] += ops / tokens
+        if not entry.analog:
+            continue
+        pt = design_energy_fj(entry.granularity, entry.fmt_x, entry.fmt_w,
+                              entry.n_r, n_cols=n_cols, seed=seed)
+        s["analog_ops_per_token"] += ops / tokens
+        s["pj_per_token"] += ops / tokens * pt["fj_per_op"] * 1e-3
+        s["fj_per_op"] = pt["fj_per_op"]
+        s["enob"] = pt["enob"]
+        s["design"] = pt["arch"]
+        analog_ops += ops
+        pj_total += ops * pt["fj_per_op"] * 1e-3
+        pj_conv += ops * pt["conv_fj_per_op"] * 1e-3
+    return {
+        "tokens": tokens,
+        "macs_per_token": ledger.macs() // tokens
+        if ledger.macs() % tokens == 0 else ledger.macs() / tokens,
+        "ops_per_token": 2 * ledger.macs() / tokens,
+        "analog_ops_per_token": analog_ops / tokens,
+        "pj_per_token": pj_total / tokens,
+        "conventional_pj_per_token": pj_conv / tokens,
+        "fj_per_op": (pj_total / analog_ops * 1e3) if analog_ops else 0.0,
+        "conventional_fj_per_op":
+            (pj_conv / analog_ops * 1e3) if analog_ops else 0.0,
+        "sites": sites,
+    }
+
+
+def phase_report(arch, *, batch: int = 1, prefill_bucket: int = 128,
+                 train_seq: Optional[int] = None, seed: int = 0,
+                 n_cols: int = 1 << 11) -> dict:
+    """Per-phase (prefill / decode / train) energy report for one arch:
+    trace the real model functions, price per site, normalize per token."""
+    decode = trace_decode(arch, batch=batch)
+    prefill = trace_prefill(arch, bucket=prefill_bucket, batch=batch)
+    train = trace_train(arch, batch=batch, seq_len=train_seq)
+    train_tokens = batch * (train_seq or (
+        max(arch.ssm_chunk, 128) if "ssm" in arch.block_pattern else 128))
+    return {
+        "decode": price_ledger(decode, batch, seed=seed, n_cols=n_cols),
+        "prefill": price_ledger(prefill, batch * prefill_bucket,
+                                seed=seed, n_cols=n_cols),
+        "train": price_ledger(train, train_tokens, seed=seed,
+                              n_cols=n_cols),
+    }

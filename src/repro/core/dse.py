@@ -24,7 +24,8 @@ from .distributions import uniform
 from .energy import CimDesign, EnergyBreakdown, TechParams, energy_per_op_fj
 from .formats import FP4_E2M1, FPFormat, IntFormat
 
-__all__ = ["DsePoint", "explore", "spec_of_format", "GAIN_RANGE_LIMIT_BITS"]
+__all__ = ["DsePoint", "explore", "explore_sites", "spec_of_format",
+           "GAIN_RANGE_LIMIT_BITS"]
 
 # Conservative C-2C linearity limit on the coupling-ladder span (§III-D1).
 GAIN_RANGE_LIMIT_BITS = 6
@@ -107,6 +108,86 @@ def evaluate_point(
         enob_conv=res_conv.enob,
         enob_gr=best_enob,
     )
+
+
+def explore_sites(
+    cim,
+    ledger,
+    *,
+    granularities=("row", "unit", "conv"),
+    seed: int = 0,
+    n_cols: int = 1 << 11,
+) -> dict:
+    """Per-site design sweep over a traced ``core.costs.CostLedger``.
+
+    This is the design space the paper's framework implies but never
+    sweeps: each matmul *site* (attention projections, MLP, MoE router /
+    experts, SSM/RG-LRU heads, LM head — see ``core.cim_config.SITES``)
+    can run its own normalization granularity, and the per-site op counts
+    from the trace weight the choice. For every analog site in ``ledger``
+    the candidate granularities are priced at that site's formats / n_r
+    (infeasible candidates — coupling ladder beyond
+    ``GAIN_RANGE_LIMIT_BITS`` — are skipped) and the cheapest wins.
+
+    Returns ``{"sites": {site: {...}}, "config": CIMConfig, "pj": float,
+    "base_pj": float}`` where ``config`` is ``cim`` with
+    ``site_overrides`` set to the winning mixed deployment and the pj
+    figures price the whole ledger under the swept vs the base designs.
+    """
+    from .cim_config import SiteDesign
+    from .costs import _GRAN_ARCH, design_energy_fj
+
+    sites: dict = {}
+    best_cfg = cim
+    pj_best = 0.0
+    pj_base = 0.0
+    for site in ledger.sites():
+        ops = 2 * ledger.macs(site=site, analog_only=True)
+        base = cim.for_site(site)
+        if ops == 0 or not base.enabled:
+            sites[site] = {"mode": "off", "ops": 2 * ledger.macs(site=site)}
+            continue
+        base_pt = design_energy_fj(base.granularity, base.fmt_x, base.fmt_w,
+                                   base.n_r, n_cols=n_cols, seed=seed)
+        pj_base += ops * base_pt["fj_per_op"] * 1e-3
+        best = None
+        for g in granularities:
+            d = CimDesign(_GRAN_ARCH[g], base.fmt_x, base.fmt_w, 0.0,
+                          base.n_r)
+            if d.gain_range_bits > GAIN_RANGE_LIMIT_BITS:
+                continue  # outside the coupling ladder's linear span
+            pt = design_energy_fj(g, base.fmt_x, base.fmt_w, base.n_r,
+                                  n_cols=n_cols, seed=seed)
+            if best is None or pt["fj_per_op"] < best[1]["fj_per_op"]:
+                best = (g, pt)
+        if best is None:
+            # every candidate outside the coupling ladder (possible when
+            # the caller restricts granularities and the formats are wide)
+            # -> the site keeps its base design
+            pj_best += ops * base_pt["fj_per_op"] * 1e-3
+            sites[site] = {
+                "granularity": base.granularity,
+                "fj_per_op": base_pt["fj_per_op"],
+                "enob": base_pt["enob"], "ops": ops,
+                "pj": ops * base_pt["fj_per_op"] * 1e-3,
+                "base_granularity": base.granularity,
+                "base_fj_per_op": base_pt["fj_per_op"],
+                "infeasible_candidates": True,
+            }
+            continue
+        g, pt = best
+        pj_best += ops * pt["fj_per_op"] * 1e-3
+        sites[site] = {
+            "granularity": g, "fj_per_op": pt["fj_per_op"],
+            "enob": pt["enob"], "ops": ops,
+            "pj": ops * pt["fj_per_op"] * 1e-3,
+            "base_granularity": base.granularity,
+            "base_fj_per_op": base_pt["fj_per_op"],
+        }
+        if g != base.granularity:
+            best_cfg = best_cfg.override_site(site, SiteDesign(granularity=g))
+    return {"sites": sites, "config": best_cfg, "pj": pj_best,
+            "base_pj": pj_base}
 
 
 def explore(

@@ -17,6 +17,31 @@ backends:
                           backend ("pallas_interpret")
     ref.py                readable pure-jnp oracle ("ref")
 
+Site threading & cost accounting
+--------------------------------
+``cim_matmul`` takes a ``site=`` label naming the model call site that
+issued the matmul (``core.cim_config.SITES``: ``attn_qkv`` / ``attn_o`` /
+``mlp`` / ``moe_router`` / ``moe_expert`` / ``rglru`` / ``ssm`` /
+``head``). The site does two jobs at this single choke point:
+
+1. **policy** — ``CIMConfig.for_site(site)`` resolves which design (or
+   "off") runs there: ``site_overrides`` first (first-class mixed
+   deployments, e.g. a conv-granularity head next to a gr-row FFN), the
+   legacy family-level ``apply_to`` otherwise;
+2. **accounting** — when a ``core.costs.recording`` trace is active, the
+   executed contract ``(site, M, K, N, granularity, fmt_x, fmt_w, n_r)``
+   is recorded into the active ``CostLedger`` *before* dispatch, shapes
+   read at Python level so a shape-only ``jax.eval_shape`` of the real
+   model functions yields exact op counts (``core.costs.trace_decode`` /
+   ``trace_prefill`` / ``trace_train``). Outside a trace the hook is one
+   list check. ``serving.engine.energy_report`` prices those ledgers per
+   site design — there is no separate analytic MAC census to drift.
+
+Two call sites record logical rather than physical shapes: the MoE expert
+stacks (``tokens × top_k`` routed rows, not the fixed-capacity dispatch
+buffer — recorded explicitly in ``models.moe``) and the LM head (true
+``vocab_size``, not the 256-padded matmul width, via ``logical_n=``).
+
 Backend selection
 -----------------
 ``CIMConfig.backend`` (or a ``backend=`` call override) names a backend or

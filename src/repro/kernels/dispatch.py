@@ -38,7 +38,12 @@ to a ``Plan(backend, tile_m, tile_n)``:
 1. an in-memory plan table (warm path: zero overhead after first use);
 2. the persisted JSON plan cache (``REPRO_GRMAC_PLAN_CACHE``, default
    ``~/.cache/repro/grmac_plans.json``) — plans measured once are reused
-   across processes, so serving/training never pay the probe twice;
+   across processes, so serving/training never pay the probe twice. The
+   file carries a schema ``version`` (``PLAN_CACHE_VERSION``); caches
+   written under a different version — or pre-versioned flat files — are
+   ignored with a warning and rewritten on the next persisted plan, so
+   growing the candidate space (tile_n, bf16-values) can never silently
+   serve stale measurements;
 3. with ``REPRO_GRMAC_AUTOTUNE=1``: a micro-autotune that times each
    candidate ``(backend, tile_m, tile_n)`` on synthetic operands of the
    requested shape, persists the winner, and returns it (skipped inside
@@ -61,6 +66,7 @@ import json
 import math
 import os
 import time
+import warnings
 from typing import Dict, Optional
 
 import jax
@@ -74,6 +80,7 @@ from .xla import grmac_matmul_xla
 
 __all__ = [
     "BACKENDS",
+    "PLAN_CACHE_VERSION",
     "Plan",
     "resolve_backend",
     "plan_for",
@@ -94,6 +101,12 @@ _BF16_ENV = "REPRO_GRMAC_BF16_VALUES"
 _AUTOTUNE_ENV = "REPRO_GRMAC_AUTOTUNE"
 # Override for the persisted plan-cache location.
 _PLAN_CACHE_ENV = "REPRO_GRMAC_PLAN_CACHE"
+# Plan-cache schema version. Bump when the plan record or the candidate
+# space changes meaning (e.g. tile_n semantics, bf16-values candidates):
+# a cache written by a different schema is ignored with a warning rather
+# than silently serving plans measured under different rules, and the
+# next persisted plan rewrites the file under the current version.
+PLAN_CACHE_VERSION = 1
 
 # Measured CPU crossover (benchmarks/kernel_bench.py): at M=16 the batched
 # einsum wins; from M=64 the fused tiles win at every granularity.
@@ -166,9 +179,25 @@ def _load_disk_plans() -> Dict[str, dict]:
     if _DISK_PLANS is None or _DISK_PLANS_PATH != path:
         try:
             with open(path) as f:
-                _DISK_PLANS = json.load(f)
+                raw = json.load(f)
         except (OSError, ValueError):
+            raw = None
+        if raw is None:
             _DISK_PLANS = {}
+        elif (not isinstance(raw, dict)
+              or raw.get("version") != PLAN_CACHE_VERSION):
+            # Version mismatch (including pre-versioned caches, which have
+            # no "version" key): the plans may have been measured under
+            # different schema rules, so ignore them — the next persisted
+            # plan rewrites the file under the current version.
+            warnings.warn(
+                f"ignoring GR-MAC plan cache {path!r}: schema version "
+                f"{raw.get('version') if isinstance(raw, dict) else '?'} "
+                f"!= {PLAN_CACHE_VERSION} (stale cache; it will be "
+                "rewritten on the next autotuned plan)")
+            _DISK_PLANS = {}
+        else:
+            _DISK_PLANS = raw.get("plans", {})
         _DISK_PLANS_PATH = path
     return _DISK_PLANS
 
@@ -182,7 +211,8 @@ def _persist_plan(key: str, plan: Plan, warm_us: float) -> None:
         os.makedirs(os.path.dirname(path), exist_ok=True)
         tmp = f"{path}.tmp.{os.getpid()}"
         with open(tmp, "w") as f:
-            json.dump(plans, f, indent=1, sort_keys=True)
+            json.dump({"version": PLAN_CACHE_VERSION, "plans": plans},
+                      f, indent=1, sort_keys=True)
         os.replace(tmp, path)
     except OSError:
         return  # read-only filesystems just skip persistence

@@ -1,10 +1,17 @@
 """Public CIM matmul ops used by the model layers.
 
-``cim_matmul(x, w, cfg)`` is a drop-in einsum-style matmul over the last dim
-of ``x``:   (..., K) @ (K, N) -> (..., N).
+``cim_matmul(x, w, cfg, site=...)`` is a drop-in einsum-style matmul over
+the last dim of ``x``:   (..., K) @ (K, N) -> (..., N).
 
 Pipeline
 --------
+0. per-site policy: ``cfg.for_site(site)`` resolves which design (or
+   "off") runs at this call site (``CIMConfig.site_overrides`` first,
+   the legacy ``apply_to`` families otherwise), and the contract
+   ``(site, M, K, N, design)`` is recorded into the active
+   ``core.costs.CostLedger`` when a trace is running — this is the single
+   choke point that keeps energy accounting structurally tied to the
+   models (see core/costs.py).
 1. dynamic pre-scale: activations are normalized into [-1, 1] by their
    per-tensor absmax (the CIM full-scale reference); weights likewise.
 2. mode dispatch:
@@ -18,7 +25,14 @@ Pipeline
                 ``cfg.tile_m``/``cfg.tile_n`` pin the tile sizes)
 3. straight-through gradients: the backward pass applies the exact-matmul
    VJP to the *raw* (unquantized, unscaled) saved operands — the standard
-   STE estimator — so the op is trainable.
+   STE estimator — so the op is trainable. (The backward is therefore
+   digital by construction; only forward contracts hit the analog array
+   and the ledger.)
+
+``logical_n`` overrides the N recorded into the ledger (the LM head
+records the true ``vocab_size``, not the 256-aligned ``padded_vocab`` —
+pad columns are masked and would never be mapped onto an array); the
+matmul itself always runs at the physical shapes.
 
 All GR-MAC backends implement the same contract and are cross-validated in
 tests/test_kernels.py.
@@ -26,11 +40,13 @@ tests/test_kernels.py.
 from __future__ import annotations
 
 import functools
+import math
 from typing import Optional
 
 import jax
 import jax.numpy as jnp
 
+from repro.core import costs
 from repro.core.cim_config import CIMConfig
 from repro.core.formats import quantize
 
@@ -92,26 +108,35 @@ def cim_matmul(
     w: jax.Array,
     cfg: Optional[CIMConfig] = None,
     *,
+    site: Optional[str] = None,
     backend: Optional[str] = None,
     use_kernel: Optional[bool] = None,
+    logical_n: Optional[int] = None,
 ) -> jax.Array:
-    """(..., K) @ (K, N) with CIM numerics per ``cfg`` (None/off = exact).
+    """(..., K) @ (K, N) with CIM numerics per ``cfg.for_site(site)``
+    (None/off = exact digital matmul).
 
+    ``site`` names the model call site (see ``core.cim_config.SITES``);
+    ``site=None`` treats ``cfg`` as already resolved (external callers).
     Backend precedence: ``backend=`` argument > ``cfg.backend`` > platform
     auto-selection (see ``kernels.dispatch``). ``use_kernel`` is the legacy
     boolean knob: True forces the Pallas kernel, False the fast XLA path.
     """
-    if cfg is None or not cfg.enabled:
+    eff = cfg.for_site(site) if cfg is not None else None
+    lead = x.shape[:-1]
+    k = x.shape[-1]
+    n = w.shape[-1]
+    costs.record_matmul(site, math.prod(lead), k,
+                        n if logical_n is None else logical_n, eff)
+    if eff is None or not eff.enabled:
         return x @ w
     if backend is None:
         if use_kernel is not None:
             backend = "pallas" if use_kernel else "xla"
         else:
-            backend = cfg.backend
+            backend = eff.backend
     # resolve outside the custom_vjp so the nondiff arg is a concrete,
     # hashable backend name (stable jit cache key)
     backend = resolve_backend(backend)
-    lead = x.shape[:-1]
-    k = x.shape[-1]
-    out = _cim_matmul_2d(x.reshape(-1, k), w, cfg, backend)
-    return out.reshape(*lead, w.shape[-1])
+    out = _cim_matmul_2d(x.reshape(-1, k), w, eff, backend)
+    return out.reshape(*lead, n)

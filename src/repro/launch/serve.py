@@ -52,7 +52,17 @@ def main():
         if i % 8 == 0:
             print(f"step {i}: {out}")
     if arch.cim.enabled:
-        print("energy:", energy_report(arch))
+        # ledger-derived, per phase: the serving deployment metric next to
+        # the serving stats (decode aliases at top level)
+        rep = energy_report(arch)
+        print(f"energy (decode): {rep['pj_per_token']:.1f} pJ/token at "
+              f"{rep['fj_per_op']:.1f} fJ/Op "
+              f"(conventional {rep['conventional_fj_per_op']:.1f} fJ/Op)")
+        for phase, ph in rep["phases"].items():
+            print(f"  {phase:8s} {ph['pj_per_token']:12.1f} pJ/token "
+                  f"({ph['analog_ops_per_token']:.3g} analog Ops/token)")
+        print(f"engine pj/token: "
+              f"{eng.energy_per_token()['pj_per_token']:.1f}")
 
 
 if __name__ == "__main__":

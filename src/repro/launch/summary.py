@@ -1,4 +1,6 @@
-"""Aggregate dry-run / roofline JSON cells into the EXPERIMENTS.md tables."""
+"""Aggregate dry-run / roofline / energy JSON cells into the
+EXPERIMENTS.md tables (``--energy`` renders the ledger-derived per-phase
+pJ/token record written by ``benchmarks/e2e_energy.py``)."""
 from __future__ import annotations
 
 import argparse
@@ -66,11 +68,37 @@ def roofline_table(rows):
             f"| {r['hlo/model']:.2f} | {r['roofline_fraction']:.3f} |")
 
 
+def energy_table(path: str):
+    """Per-arch × per-phase pJ/token from the trace-derived CostLedger
+    record (benchmarks/e2e_energy.py): the deployment bottom line."""
+    with open(path) as f:
+        recs = json.load(f)
+    print("| arch | fJ/Op (conv) | decode pJ/tok | prefill pJ/tok | "
+          "train pJ/tok | decode GOps/tok |")
+    print("|---|---|---|---|---|---|")
+    for arch, r in sorted(recs.items()):
+        ph = r["phases"]
+        print(
+            f"| {arch} | {r['fj_per_op']:.1f} "
+            f"({r['conventional_fj_per_op']:.1f}) "
+            f"| {ph['decode']['pj_per_token']:.0f} "
+            f"| {ph['prefill']['pj_per_token']:.0f} "
+            f"| {ph['train']['pj_per_token']:.0f} "
+            f"| {ph['decode']['ops_per_token']/1e9:.3f} |")
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--dir", default="experiments/dryrun")
     ap.add_argument("--roofline", action="store_true")
+    ap.add_argument("--energy", action="store_true",
+                    help="render experiments/bench/e2e_energy.json")
+    ap.add_argument("--energy-record",
+                    default="experiments/bench/e2e_energy.json")
     args = ap.parse_args()
+    if args.energy:
+        energy_table(args.energy_record)
+        return
     rows = load(args.dir, args.roofline)
     if args.roofline:
         roofline_table(rows)

@@ -1,8 +1,11 @@
 """Shared transformer layers: norms, rotary embeddings, GQA attention
 (full + sliding window, train and cached-decode paths), and MLPs.
 
-All projection matmuls route through ``repro.kernels.ops.cim_matmul`` so the
-paper's GR-CIM numerics can be switched on per-config (CIMConfig.apply_to).
+All projection matmuls route through ``repro.kernels.ops.cim_matmul`` with a
+**site** label (``core.cim_config.SITES``), so the paper's GR-CIM numerics
+can be switched on — and mixed per site — via ``CIMConfig.site_overrides``
+(legacy family-level ``apply_to`` still works), and so the cost/trace
+subsystem (``core.costs``) can account every matmul from its real call site.
 Functional style: ``init_*`` builds param pytrees, ``apply_*`` consumes them.
 Compute dtype follows the inputs; softmax/normalization accumulate in f32.
 """
@@ -46,10 +49,13 @@ def init_dense(key, d_in: int, d_out: int, dtype, scale: Optional[float] = None,
     return p
 
 
-def dense(p, x, cim: Optional[CIMConfig] = None, site: str = "ffn"):
-    """x @ W (+ b), optionally through the CIM simulation for this site."""
-    cfg = cim if (cim is not None and cim.enabled and site in cim.apply_to) else None
-    y = cim_matmul(x, p["w"].astype(x.dtype), cfg)
+def dense(p, x, cim: Optional[CIMConfig] = None, site: str = "mlp",
+          logical_n: Optional[int] = None):
+    """x @ W (+ b), through the CIM simulation resolved for this site
+    (``cim.for_site(site)``; None or a site resolving to "off" is exact).
+    ``logical_n`` overrides the ledger-recorded output width (LM head)."""
+    y = cim_matmul(x, p["w"].astype(x.dtype), cim, site=site,
+                   logical_n=logical_n)
     if "b" in p:
         y = y + p["b"].astype(x.dtype)
     return y
@@ -266,9 +272,9 @@ def attention(
     groups = h // kv
     cim = cfg.cim
 
-    q = dense(p["wq"], x, cim, "qkvo").reshape(b, s, h, dh)
-    k = dense(p["wk"], x, cim, "qkvo").reshape(b, s, kv, dh)
-    v = dense(p["wv"], x, cim, "qkvo").reshape(b, s, kv, dh)
+    q = dense(p["wq"], x, cim, "attn_qkv").reshape(b, s, h, dh)
+    k = dense(p["wk"], x, cim, "attn_qkv").reshape(b, s, kv, dh)
+    v = dense(p["wv"], x, cim, "attn_qkv").reshape(b, s, kv, dh)
     q = rope(q, positions, cfg.rope_theta)
     k = rope(k, positions, cfg.rope_theta)
 
@@ -311,7 +317,7 @@ def attention(
         out = jnp.einsum("bkgst,btkd->bskgd", probs, vv.astype(x.dtype))
 
     out = out.reshape(b, s, h * dh)
-    return dense(p["wo"], out, cim, "qkvo"), new_cache
+    return dense(p["wo"], out, cim, "attn_o"), new_cache
 
 
 # ------------------------------------------------------------------ MLP
@@ -329,10 +335,10 @@ def init_mlp(key, d: int, f: int, cfg: ArchConfig, dtype):
 
 def mlp(p, x, cfg: ArchConfig):
     cim = cfg.cim
-    hidden = dense(p["wi"], x, cim, "ffn")
+    hidden = dense(p["wi"], x, cim, "mlp")
     if cfg.gated_mlp:
-        hidden = jax.nn.silu(dense(p["wg"], x, cim, "ffn")) * hidden
+        hidden = jax.nn.silu(dense(p["wg"], x, cim, "mlp")) * hidden
     else:
         hidden = jax.nn.gelu(hidden)
     hidden = shard(hidden, "data", None, "model")
-    return dense(p["wo"], hidden, cim, "ffn")
+    return dense(p["wo"], hidden, cim, "mlp")

@@ -25,6 +25,7 @@ from jax.sharding import PartitionSpec as P
 
 from repro.compat import shard_map
 from repro.configs.base import ArchConfig
+from repro.core import costs
 from repro.models.layers import dense, init_dense, init_mlp, mlp
 from repro.parallel.sharding import axis_divides, batch_axes, get_mesh, shard
 
@@ -110,7 +111,8 @@ def moe(p, x: jax.Array, cfg: ArchConfig,
           else valid.reshape(t).astype(bool))
 
     # --- routing (always f32 for numerics) ---
-    logits = dense(p["router"], xf.astype(jnp.float32), cfg.cim, "expert")
+    logits = dense(p["router"], xf.astype(jnp.float32), cfg.cim,
+                   "moe_router")
     probs = jax.nn.softmax(logits, axis=-1)                       # (T, E)
     gate_vals, expert_idx = jax.lax.top_k(probs, k)               # (T, k)
     gate_vals = gate_vals / jnp.maximum(
@@ -146,6 +148,19 @@ def moe(p, x: jax.Array, cfg: ArchConfig,
     buf = shard(buf, "model" if ep else None, "data", None)
 
     # --- expert computation: (E, C, D) @ (E, D, F) --- (GSPMD)
+    # Cost accounting: the ledger records the *logical* routed compute —
+    # T·k token-assignments through each of the expert matmuls — not the
+    # fixed-capacity (E, cap) dispatch buffer, whose padded rows would
+    # never be mapped onto an analog array (and whose size is a serving
+    # heuristic, not model structure). The expert einsums themselves stay
+    # digital batched GEMMs (the router is the CIM-simulated matmul here);
+    # their *pricing* still follows the "moe_expert" site design.
+    f = cfg.expert_d_ff
+    eff = cfg.cim.for_site("moe_expert")
+    costs.record_matmul("moe_expert", t * k, d, f, eff)
+    if cfg.gated_mlp:
+        costs.record_matmul("moe_expert", t * k, d, f, eff)
+    costs.record_matmul("moe_expert", t * k, f, d, eff)
     wi = p["experts"]["wi"].astype(x.dtype)
     wo = p["experts"]["wo"].astype(x.dtype)
     h = jnp.einsum("ecd,edf->ecf", buf, wi)

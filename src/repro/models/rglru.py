@@ -55,9 +55,9 @@ def init_rglru_state(cfg: ArchConfig, batch: int, dtype=jnp.float32):
 
 
 def _branches(p, u, cfg: ArchConfig):
-    x = dense(p["in_proj"], u, cfg.cim, "qkvo")
-    r = jax.nn.sigmoid(dense(p["gate_r"], u, cfg.cim, "qkvo").astype(jnp.float32))
-    i = jax.nn.sigmoid(dense(p["gate_i"], u, cfg.cim, "qkvo").astype(jnp.float32))
+    x = dense(p["in_proj"], u, cfg.cim, "rglru")
+    r = jax.nn.sigmoid(dense(p["gate_r"], u, cfg.cim, "rglru").astype(jnp.float32))
+    i = jax.nn.sigmoid(dense(p["gate_i"], u, cfg.cim, "rglru").astype(jnp.float32))
     log_a = -_C * jax.nn.softplus(p["lam"])[None, None, :] * r   # (B,S,W) ≤ 0
     return x, i, log_a
 
@@ -78,7 +78,7 @@ def rglru_train(p, u: jax.Array, cfg: ArchConfig) -> jax.Array:
 
     aa, h = jax.lax.associative_scan(combine, (a, gated), axis=1)
     h = shard(h.astype(u.dtype), "data", None, "model")
-    return dense(p["out_proj"], h, cfg.cim, "qkvo")
+    return dense(p["out_proj"], h, cfg.cim, "rglru")
 
 
 def _recurrence_step(kernel, h, win, x_t, i_t, log_a_t):
@@ -105,7 +105,7 @@ def rglru_decode(
         kernel, state["h"], state["conv"], x[:, 0, :], i[:, 0, :],
         log_a[:, 0, :])
     out = dense(p["out_proj"], h_new[:, None, :].astype(u.dtype),
-                cfg.cim, "qkvo")
+                cfg.cim, "rglru")
     return out, {"h": h_new, "conv": new_conv}
 
 
@@ -139,5 +139,5 @@ def rglru_prefill(
     (h_last, win_last), h_seq = jax.lax.scan(
         step, (state["h"], state["conv"]), xs)
     h_seq = jnp.moveaxis(h_seq, 0, 1).astype(u.dtype)            # (B, S, W)
-    out = dense(p["out_proj"], h_seq, cfg.cim, "qkvo")
+    out = dense(p["out_proj"], h_seq, cfg.cim, "rglru")
     return out, {"h": h_last, "conv": win_last}

@@ -66,11 +66,11 @@ def _causal_conv(x: jax.Array, kernel: jax.Array) -> jax.Array:
 def _project(p, u, cfg: ArchConfig):
     """Shared projection head. u: (B,S,D) -> z, x, B, C, dt."""
     di, n, nh, hd = cfg.d_inner, cfg.ssm_state, cfg.ssm_heads, cfg.ssm_headdim
-    zx = dense(p["in_proj"], u, cfg.cim, "qkvo")
+    zx = dense(p["in_proj"], u, cfg.cim, "ssm")
     z, x = jnp.split(zx, [di], axis=-1)
-    bc = dense(p["bc_proj"], u, cfg.cim, "qkvo").astype(jnp.float32)
+    bc = dense(p["bc_proj"], u, cfg.cim, "ssm").astype(jnp.float32)
     bmat, cmat = jnp.split(bc, [n], axis=-1)                     # (B,S,N) each
-    dt = dense(p["dt_proj"], u, cfg.cim, "qkvo").astype(jnp.float32)
+    dt = dense(p["dt_proj"], u, cfg.cim, "ssm").astype(jnp.float32)
     dt = jax.nn.softplus(dt + p["dt_bias"][None, None, :])       # (B,S,NH)
     return z, x, bmat, cmat, dt
 
@@ -147,7 +147,7 @@ def ssm_train(p, u: jax.Array, cfg: ArchConfig) -> jax.Array:
     y = y.reshape(b, s, di).astype(u.dtype)
     y = rmsnorm(p["out_norm"], y * jax.nn.silu(z))
     y = shard(y, "data", None, "model")
-    return dense(p["out_proj"], y, cfg.cim, "qkvo")
+    return dense(p["out_proj"], y, cfg.cim, "ssm")
 
 
 def _recurrence_step(p, cfg: ArchConfig, kernel, a_rate,
@@ -187,7 +187,7 @@ def ssm_decode(
         x[:, 0, :], bmat[:, 0, :], cmat[:, 0, :], dt[:, 0, :])
     y = y.reshape(b, 1, di).astype(u.dtype)
     y = rmsnorm(p["out_norm"], y * jax.nn.silu(z))
-    out = dense(p["out_proj"], y, cfg.cim, "qkvo")
+    out = dense(p["out_proj"], y, cfg.cim, "ssm")
     return out, {"h": h_new, "conv": new_conv}
 
 
@@ -226,5 +226,5 @@ def ssm_prefill(
         step, (state["h"], state["conv"]), xs)
     y = jnp.moveaxis(y_seq, 0, 1).reshape(b, s, di).astype(u.dtype)
     y = rmsnorm(p["out_norm"], y * jax.nn.silu(z))
-    out = dense(p["out_proj"], y, cfg.cim, "qkvo")
+    out = dense(p["out_proj"], y, cfg.cim, "ssm")
     return out, {"h": h_last, "conv": win_last}

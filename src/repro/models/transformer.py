@@ -22,6 +22,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs.base import ArchConfig
+from repro.kernels.ops import cim_matmul
 from repro.models import layers as L
 from repro.models.moe import init_moe, moe
 from repro.models.rglru import (
@@ -322,10 +323,15 @@ def forward(
             new_cache["tail"] = new_tail
 
     x = L.rmsnorm(params["final_norm"], x)
+    # LM head routes through the CIM op in both tied and untied form, so
+    # "head" is a real policy site on every arch; the ledger records the
+    # true vocab_size (pad columns are masked, never mapped to an array)
     if cfg.tie_embeddings:
-        logits = x @ params["embed"].T.astype(x.dtype)
+        logits = cim_matmul(x, params["embed"].T.astype(x.dtype), cfg.cim,
+                            site="head", logical_n=cfg.vocab_size)
     else:
-        logits = L.dense(params["lm_head"], x, cfg.cim, "head")
+        logits = L.dense(params["lm_head"], x, cfg.cim, "head",
+                         logical_n=cfg.vocab_size)
     logits = shard(logits, "data", None, "model")
     if cfg.padded_vocab != cfg.vocab_size:
         # mask pad-vocab columns (fused elementwise; keeps the model-axis

@@ -9,17 +9,27 @@ bounded by the O(log max_ctx) distinct bucket lengths per arch. Lanes not
 being prefilled are frozen inside the dispatch (length 0), so no host-side
 cache merging happens on the prefill path at all.
 
+The **first output token is sampled from the prefill itself**: both
+prefill modes adopt the last-valid-token logits (``prefill_step`` returns
+them; the legacy token path's final dispatch produces the same ids), so
+the first decode step feeds the first *generated* token — the seed-era
+re-feed of the last prompt token, which wrote its K/V at positions len-1
+AND len, is gone. ``add_request`` therefore appends one generated token
+before returning (pass ``key`` to sample it when ``temperature > 0``).
+
 Decode (``step``) is a single jit'd function over the whole batch that also
 performs the per-lane cache merge *and* token selection (greedy argmax or
 temperature-categorical) on device: logits never leave the device — the
 host sees exactly one device→host transfer of a ``(batch_slots,)`` int32
 array of sampled ids per step.
 
-Per-token CIM energy accounting: when the arch config has the GR-CIM path
-enabled, ``energy_report`` walks the model dims and prices every projection
-matmul with the paper's cost model (fJ/Op) — the deployment metric the
-paper optimizes. The underlying DSE Monte-Carlo solve is memoized per
-design point.
+Per-token CIM energy accounting: ``energy_report`` prices the
+``core.costs.CostLedger`` built by a shape-only trace of the *real* model
+functions (prefill / decode / train phases) at each site's resolved design
+— no hand-derived MAC census — and ``Engine.step`` /
+``Engine.energy_per_token`` surface decode-phase pJ per generated token
+next to the serving stats. The underlying required-ENOB Monte-Carlo is
+memoized per design point (see ``core.costs.design_energy_fj``).
 """
 from __future__ import annotations
 
@@ -32,7 +42,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.base import ArchConfig
-from repro.core.dse import evaluate_point
+from repro.core import costs
 from repro.models import decode_step, init_cache, prefill_step
 
 __all__ = ["ServeConfig", "Engine", "StepResult", "energy_report"]
@@ -41,12 +51,23 @@ __all__ = ["ServeConfig", "Engine", "StepResult", "energy_report"]
 class StepResult(dict):
     """``Engine.step`` result: slot id -> sampled token (dict, as before),
     plus ``finished`` — the slot ids freed this step (per-slot EOS or
-    context exhaustion), in ascending slot order. A finished slot is
-    immediately claimable by ``add_request``."""
+    context exhaustion), in ascending slot order — and ``pj_per_token``,
+    the decode-phase CIM energy per generated token (None when the arch
+    serves without the CIM path). The energy is resolved lazily on first
+    access (a thunk into ``Engine.energy_per_token``'s memo), so the
+    decode hot path never pays the trace/ENOB solve for callers that
+    don't read it. A finished slot is immediately claimable by
+    ``add_request``."""
 
-    def __init__(self, tokens: dict, finished: List[int]):
+    def __init__(self, tokens: dict, finished: List[int],
+                 energy_fn: Optional[callable] = None):
         super().__init__(tokens)
         self.finished = finished
+        self._energy_fn = energy_fn
+
+    @property
+    def pj_per_token(self) -> Optional[float]:
+        return self._energy_fn() if self._energy_fn is not None else None
 
 
 def _merge_cache(old, new, mask):
@@ -155,6 +176,8 @@ class Engine:
         # slots that have hosted a request (their cache state is dirty and
         # must be zeroed before reuse)
         self._dirty = np.zeros(cfg.batch_slots, bool)
+        # lazily-computed decode-phase energy report (None until asked)
+        self._energy: Optional[dict] = None
         self.stats = {"prefill_dispatches": 0, "decode_steps": 0}
 
     @staticmethod
@@ -172,14 +195,25 @@ class Engine:
 
     # ------------------------------------------------------------ prefill
     def add_request(self, prompt: List[int],
-                    eos_id: Optional[int] = None) -> int:
-        """Prefill a free slot and return its id.
+                    eos_id: Optional[int] = None,
+                    key: Optional[jax.Array] = None) -> int:
+        """Prefill a free slot, sample the first output token from the
+        prefill logits, and return the slot id.
 
         Bucketed mode splits the prompt into ``prefill_bucket_max``-sized
         chunks, pads the remainder up to a power of two, and issues one
         compiled dispatch per chunk — ``ceil(len / bucket_max)`` dispatches
         (never more than ``ceil(log2(len)) + 1`` for prompts that fit the
         context), vs ``len`` in legacy ``prefill_mode="token"``.
+
+        Both modes adopt the last-valid-token logits to produce the first
+        generated token here (appended to ``tokens[slot]``), so the first
+        ``step`` feeds *that* token — no decode dispatch ever re-feeds the
+        last prompt token, whose K/V used to be written twice (at len-1
+        and len). Pass ``key`` to sample it when ``temperature > 0``
+        (greedy argmax otherwise, exactly like ``step``). A first token
+        that hits the request's EOS finishes the request immediately (the
+        slot never joins the decode batch and is free to reuse).
 
         ``eos_id`` overrides ``cfg.eos_id`` for this request: the lane is
         freed as soon as it emits that token (the EOS itself is kept in
@@ -188,10 +222,10 @@ class Engine:
         if not prompt:
             raise ValueError("empty prompt")
         if len(prompt) >= self.cfg.max_ctx:
-            # strictly less: the first decode step writes the re-fed last
-            # prompt token at position len(prompt), which must still be a
-            # valid cache index (at len == max_ctx it would clamp onto the
-            # last prompt entry and corrupt the lane)
+            # strictly less: the first decode step writes the first
+            # *generated* token's K/V at position len(prompt), which must
+            # still be a valid cache index (at len == max_ctx it would
+            # clamp onto the last prompt entry and corrupt the lane)
             raise ValueError(
                 f"prompt of {len(prompt)} tokens needs max_ctx > "
                 f"{len(prompt)} (got {self.cfg.max_ctx}) to decode")
@@ -207,17 +241,41 @@ class Engine:
         self.active[slot] = True
         eos = eos_id if eos_id is not None else self.cfg.eos_id
         self._eos[slot] = -1 if eos is None else int(eos)
+        sample = self.cfg.temperature > 0 and key is not None
         if self.cfg.prefill_mode == "token":
-            for t in prompt:
+            for t in prompt[:-1]:
                 self._advance_slot(slot, t)
+            # the final dispatch's ids ARE the last-valid-token selection
+            first = self._advance_slot(slot, prompt[-1], sample=sample,
+                                       key=key)
         else:
             pos = 0
+            logits = None
             while pos < len(prompt):
                 chunk = prompt[pos:pos + self.cfg.prefill_bucket_max]
-                self._prefill_chunk(slot, chunk)
+                logits = self._prefill_chunk(slot, chunk)
                 pos += len(chunk)
-        self._last_host[slot] = prompt[-1]
+            first = self._select_token(logits, slot, sample, key)
+        self.tokens[slot].append(first)
+        self._last_host[slot] = first
+        if self._eos[slot] >= 0 and first == self._eos[slot]:
+            self.active[slot] = False  # one-token completion: free at once
         return slot
+
+    def _select_token(self, logits_dev: jax.Array, slot: int,
+                      sample: bool, key: Optional[jax.Array]) -> int:
+        """Token selection over prefill logits (B, V), mirroring the fused
+        decode's math exactly (per-lane key split + categorical / argmax)
+        so token-mode and bucketed-mode prefill stay equivalent. Routed
+        through ``_fetch`` — the engine's single transfer point."""
+        if sample:
+            keys = jax.random.split(key, logits_dev.shape[0])
+            ids = jax.vmap(
+                lambda k, lg: jax.random.categorical(
+                    k, lg / self.cfg.temperature))(keys, logits_dev)
+        else:
+            ids = jnp.argmax(logits_dev, axis=-1)
+        return int(self._fetch(ids.astype(jnp.int32))[slot])
 
     def _reset_slot_state(self, slot: int):
         """Zero one lane's cache before a freed slot hosts a new request.
@@ -245,35 +303,43 @@ class Engine:
             b *= 2
         return b
 
-    def _prefill_chunk(self, slot: int, chunk: List[int]):
+    def _prefill_chunk(self, slot: int, chunk: List[int]) -> jax.Array:
         """One bucketed prefill dispatch: the chunk is right-padded to its
         bucket and every other lane rides along frozen (length 0), so the
-        returned cache is adopted wholesale — no merge."""
+        returned cache is adopted wholesale — no merge. Returns the
+        last-valid-token logits (B, V) on device (the final chunk's feed
+        the first-output-token selection)."""
         bucket = self._bucket(len(chunk))
         toks = np.zeros((self.cfg.batch_slots, bucket), np.int32)
         toks[slot, :len(chunk)] = chunk
         lens = np.zeros(self.cfg.batch_slots, np.int32)
         lens[slot] = len(chunk)
         fill = _prefill_fn(self.arch, bucket)
-        _, self.cache = fill(
+        logits, self.cache = fill(
             self.params, jnp.asarray(toks), self.cache,
             self._snapshot(self.lengths), jnp.asarray(lens))
         self.lengths[slot] += len(chunk)
         self.stats["prefill_dispatches"] += 1
+        return logits
 
-    def _advance_slot(self, slot: int, token: int):
+    def _advance_slot(self, slot: int, token: int, sample: bool = False,
+                      key: Optional[jax.Array] = None) -> int:
         # Legacy token-by-token prefill: a batched decode call with per-slot
         # indices, all lanes but ``slot`` masked out of the cache merge.
+        # Returns this slot's selected next token (meaningful on the final
+        # prompt token, where it is the first generated token).
         toks = np.zeros((self.cfg.batch_slots, 1), np.int32)
         toks[slot, 0] = token
         mask = np.zeros(self.cfg.batch_slots, bool)
         mask[slot] = True
-        _, self.cache = _decode_fn(self.arch, False)(
+        ids, self.cache = _decode_fn(self.arch, sample)(
             self.params, jnp.asarray(toks), self.cache,
             self._snapshot(self.lengths), jnp.asarray(mask),
-            jax.random.PRNGKey(0), 1.0)
+            key if key is not None else jax.random.PRNGKey(0),
+            float(self.cfg.temperature) if sample else 1.0)
         self.lengths[slot] += 1
         self.stats["prefill_dispatches"] += 1
+        return int(self._fetch(ids)[slot])
 
     # ------------------------------------------------------------ decode
     def step(self, key: Optional[jax.Array] = None) -> "StepResult":
@@ -286,12 +352,15 @@ class Engine:
 
         Returns a ``StepResult`` (a dict of slot id -> token, exactly as
         before) whose ``finished`` attribute lists the slots freed this
-        step — lanes that emitted their EOS or ran out of context. Freed
-        slots drop out of the active mask (their caches freeze inside the
-        fused decode) and are immediately claimable by ``add_request``.
+        step — lanes that emitted their EOS or ran out of context — and
+        whose ``pj_per_token`` carries the decode-phase CIM energy per
+        generated token (ledger-derived, see ``energy_per_token``; None
+        when the arch serves without the CIM path). Freed slots drop out
+        of the active mask (their caches freeze inside the fused decode)
+        and are immediately claimable by ``add_request``.
         """
         if not self.active.any():
-            return StepResult({}, [])
+            return StepResult({}, [], self._pj_per_token)
         sample = self.cfg.temperature > 0 and key is not None
         fn = _decode_fn(self.arch, sample)
         ids_dev, self.cache = fn(
@@ -317,74 +386,67 @@ class Engine:
         finished = [int(s) for s in np.where(done)[0]]
         self.active[done] = False
         self.stats["decode_steps"] += 1
-        return StepResult(out, finished)
+        return StepResult(out, finished, self._pj_per_token)
+
+    # ------------------------------------------------------------ energy
+    def energy_per_token(self) -> Optional[dict]:
+        """Decode-phase energy report for this engine's served arch: the
+        ``core.costs`` ledger of one decode step priced per site, per
+        generated token. Computed lazily once per engine (a shape-only
+        trace + the memoized ENOB solve); None when the arch's CIM path
+        is off."""
+        if not self.arch.cim.enabled:
+            return None
+        if self._energy is None:
+            self._energy = costs.price_ledger(
+                costs.trace_decode(self.arch), 1)
+            self.stats["pj_per_token"] = self._energy["pj_per_token"]
+        return self._energy
+
+    def _pj_per_token(self) -> Optional[float]:
+        rep = self.energy_per_token()
+        return None if rep is None else rep["pj_per_token"]
 
     @staticmethod
     def _fetch(ids_dev: jax.Array) -> np.ndarray:
-        """The single device→host transfer per decode step: the sampled
-        (batch_slots,) int32 token ids."""
+        """The single device→host transfer per decode step (and per
+        prefill first-token selection): a (batch_slots,) int32 id array."""
         return np.asarray(ids_dev)
 
 
-@functools.lru_cache(maxsize=64)
-def _energy_point(fmt_x, fmt_w, n_r, n_cols, seed):
-    """Memoized ``evaluate_point``: the required-ENOB solve behind it runs
-    a full Monte-Carlo per call, but is fully determined by the CIM design
-    knobs *and the sampling configuration* — the RNG seed and the sample
-    count are part of the cache key, so a changed sampling setup can never
-    be served a stale memoized solve."""
-    return evaluate_point(
-        jax.random.PRNGKey(seed), fmt_x, fmt_w, n_r=n_r, n_cols=n_cols)
-
-
-def energy_report(arch: ArchConfig, seq_len: int = 1, *,
+def energy_report(arch: ArchConfig, *, batch: int = 1,
+                  prefill_bucket: int = 128,
+                  train_seq: Optional[int] = None,
                   seed: int = 0, n_cols: int = 1 << 11) -> dict:
-    """Per-token CIM energy (pJ) from the paper's cost model.
+    """Ledger-derived CIM energy report (pJ/token) for all three phases.
 
-    Counts MACs of every projection matmul executed per decoded token and
-    prices them at the config's design point (fJ/Op × 2 Ops/MAC).
-    ``seed``/``n_cols`` configure the underlying Monte-Carlo ENOB solve
-    (both participate in its memoization key).
+    Traces the *real* model functions — ``prefill_step`` (one
+    ``prefill_bucket``-token dispatch), the decode step, and the train
+    step — into ``core.costs.CostLedger``s and prices every recorded
+    contract at its site's resolved design (``CIMConfig.for_site``), so
+    mixed per-site deployments (``site_overrides``) and per-phase shape
+    differences are priced faithfully and the numbers can never drift
+    from the model code. Top-level keys alias the decode phase (the
+    deployment metric the paper optimizes); ``phases`` carries the full
+    per-phase, per-site breakdown. ``seed``/``n_cols`` configure the
+    underlying Monte-Carlo ENOB solve (both participate in its
+    memoization key).
     """
     if not arch.cim.enabled:
         return {"enabled": False}
-    pt = _energy_point(arch.cim.fmt_x, arch.cim.fmt_w, arch.cim.n_r,
-                       n_cols, seed)
-    gr = pt.gr if pt.gr is not None else pt.conv
-    fj_per_op = gr.total
-    macs = 0
-    d = arch.d_model
-    for kind in arch.blocks():
-        if kind in ("attn", "local"):
-            macs += d * (arch.n_heads + 2 * arch.n_kv_heads) * arch.d_head
-            macs += arch.n_heads * arch.d_head * d
-            ffn = True
-        elif kind == "rglru":
-            w = arch.rnn_width
-            macs += 3 * d * w + w * d
-            ffn = True
-        elif kind == "ssm":
-            macs += d * (2 * arch.d_inner + 2 * arch.ssm_state
-                         + arch.ssm_heads) + arch.d_inner * d
-            ffn = False
-        if ffn and kind != "ssm":
-            if arch.is_moe:
-                f = arch.expert_d_ff
-                nmat = 3 if arch.gated_mlp else 2
-                macs += arch.top_k * nmat * d * f + d * arch.n_experts
-                if arch.moe_dense_residual:
-                    macs += nmat * d * arch.d_ff
-            else:
-                nmat = 3 if arch.gated_mlp else 2
-                macs += nmat * d * arch.d_ff
-    macs += d * arch.vocab_size  # LM head
-    ops = 2 * macs * seq_len
+    phases = costs.phase_report(arch, batch=batch,
+                                prefill_bucket=prefill_bucket,
+                                train_seq=train_seq, seed=seed,
+                                n_cols=n_cols)
+    dec = phases["decode"]
     return {
         "enabled": True,
-        "design": pt.gr_arch,
-        "fj_per_op": fj_per_op,
-        "enob": pt.enob_gr,
-        "ops_per_token": ops,
-        "pj_per_token": ops * fj_per_op * 1e-3,
-        "conventional_fj_per_op": pt.conv.total if pt.conv else None,
+        "phases": phases,
+        # decode-phase aliases: the legacy per-decoded-token metric
+        "fj_per_op": dec["fj_per_op"],
+        "conventional_fj_per_op": dec["conventional_fj_per_op"],
+        "ops_per_token": dec["ops_per_token"],
+        "analog_ops_per_token": dec["analog_ops_per_token"],
+        "pj_per_token": dec["pj_per_token"],
+        "sites": dec["sites"],
     }

@@ -1,0 +1,223 @@
+"""Cost/trace subsystem regression net.
+
+1. The retired analytic MAC census (the hand-derived per-arch formula that
+   ``energy_report`` used before the CostLedger) is kept HERE as the
+   oracle: the ledger built by a shape-only trace of the real decode step
+   must reproduce its per-token op counts with exact integer equality for
+   every registered arch config. If a model change moves the counts, this
+   test localizes whether the accounting followed (update the oracle
+   consciously) or broke.
+2. ``CIMConfig.site_overrides`` set to the base design must be
+   bit-identical to no overrides (policy resolution cannot perturb
+   numerics), and "off"/design overrides must act per site.
+3. Phase reports price analog sites only; a site forced off keeps its ops
+   in the ledger but out of the pJ figure.
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config, list_configs
+from repro.core import costs
+from repro.core.cim_config import CIMConfig, SiteDesign
+from repro.models import forward, init_params
+
+
+# --------------------------------------------------------------- census
+def analytic_census_decode_macs(arch) -> int:
+    """The retired hand-rolled MAC census (verbatim from the old
+    ``serving.engine.energy_report``): projection MACs per decoded token,
+    re-deriving every architecture's structure by hand."""
+    macs = 0
+    d = arch.d_model
+    for kind in arch.blocks():
+        if kind in ("attn", "local"):
+            macs += d * (arch.n_heads + 2 * arch.n_kv_heads) * arch.d_head
+            macs += arch.n_heads * arch.d_head * d
+            ffn = True
+        elif kind == "rglru":
+            w = arch.rnn_width
+            macs += 3 * d * w + w * d
+            ffn = True
+        elif kind == "ssm":
+            macs += d * (2 * arch.d_inner + 2 * arch.ssm_state
+                         + arch.ssm_heads) + arch.d_inner * d
+            ffn = False
+        if ffn and kind != "ssm":
+            if arch.is_moe:
+                f = arch.expert_d_ff
+                nmat = 3 if arch.gated_mlp else 2
+                macs += arch.top_k * nmat * d * f + d * arch.n_experts
+                if arch.moe_dense_residual:
+                    macs += nmat * d * arch.d_ff
+            else:
+                nmat = 3 if arch.gated_mlp else 2
+                macs += nmat * d * arch.d_ff
+    macs += d * arch.vocab_size  # LM head
+    return macs
+
+
+@pytest.mark.parametrize("name", list_configs())
+def test_ledger_decode_matches_analytic_census(name):
+    """Trace-derived decode op-counts == the retired census, exactly, for
+    every registered arch (the ten assigned + the paper's edge config)."""
+    arch = get_config(name)
+    ledger = costs.trace_decode(arch)
+    assert ledger.macs() == analytic_census_decode_macs(arch), name
+
+
+def test_ledger_scales_with_batch_and_all_sites_labeled():
+    arch = get_config("grok-1-314b")
+    one = costs.trace_decode(arch, batch=1)
+    four = costs.trace_decode(arch, batch=4)
+    assert four.macs() == 4 * one.macs()
+    # every contract carries a canonical site label (nothing "unsited")
+    assert "unsited" not in one.sites()
+    assert {"attn_qkv", "attn_o", "moe_router", "moe_expert", "head"} \
+        <= set(one.sites())
+
+
+def test_prefill_and_train_traces_are_per_token_consistent():
+    """Per-token structure is phase-invariant for a dense arch: one
+    prefill bucket and one train step count bucket/seq × the decode
+    step's MACs (the phases differ in M per contract, not in structure)."""
+    arch = get_config("qwen2-1.5b")
+    per_tok = costs.trace_decode(arch).macs()
+    assert costs.trace_prefill(arch, bucket=32).macs() == 32 * per_tok
+    assert costs.trace_train(arch, seq_len=64).macs() == 64 * per_tok
+
+
+# ------------------------------------------------------- site overrides
+def _tiny(mode="grmac"):
+    arch = get_config("paper-cim-120m").replace(
+        n_layers=2, d_model=128, n_heads=4, n_kv_heads=4, d_head=32,
+        d_ff=256, vocab_size=512)
+    return arch.replace(cim=arch.cim.with_mode(mode))
+
+
+def test_site_overrides_identical_to_base_is_bit_identical():
+    """Overriding every site with the base design's own values must be a
+    no-op down to the last ulp of the logits (policy resolution cannot
+    perturb numerics)."""
+    arch = _tiny()
+    base = arch.cim
+    same = base
+    for site in ("attn_qkv", "attn_o", "mlp", "head"):
+        same = same.override_site(site, SiteDesign(
+            mode=base.mode, granularity=base.granularity,
+            fmt_x=base.fmt_x, fmt_w=base.fmt_w, n_r=base.n_r))
+    arch_ov = arch.replace(cim=same)
+    params = init_params(jax.random.PRNGKey(0), arch)
+    toks = jax.random.randint(jax.random.PRNGKey(1), (2, 8), 0,
+                              arch.vocab_size)
+    a, _, _ = forward(params, toks, arch)
+    b, _, _ = forward(params, toks, arch_ov)
+    np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_site_override_off_matches_apply_to_removal():
+    """site_overrides=("head", "off") must equal the legacy coarse switch
+    (apply_to without "head") bitwise — apply_to is the degenerate case."""
+    arch = _tiny()
+    via_override = arch.replace(cim=arch.cim.override_site("head", "off"))
+    via_family = arch.replace(cim=dataclasses.replace(
+        arch.cim, apply_to=("ffn", "qkvo", "expert")))
+    params = init_params(jax.random.PRNGKey(0), arch)
+    toks = jax.random.randint(jax.random.PRNGKey(2), (2, 8), 0,
+                              arch.vocab_size)
+    a, _, _ = forward(params, toks, via_override)
+    b, _, _ = forward(params, toks, via_family)
+    c, _, _ = forward(params, toks, arch)
+    np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    assert np.any(np.asarray(a) != np.asarray(c))  # the head really moved
+
+
+def test_mixed_deployment_changes_numerics_per_site():
+    """A conv-granularity head next to the gr-row body is first-class:
+    it changes the logits vs the all-row deployment, and the resolved
+    per-site configs report the right designs."""
+    arch = _tiny()
+    mixed_cim = arch.cim.override_site("head", SiteDesign(
+        granularity="conv"))
+    assert mixed_cim.for_site("head").granularity == "conv"
+    assert mixed_cim.for_site("mlp").granularity == "row"
+    mixed = arch.replace(cim=mixed_cim)
+    params = init_params(jax.random.PRNGKey(0), arch)
+    toks = jax.random.randint(jax.random.PRNGKey(3), (2, 8), 0,
+                              arch.vocab_size)
+    a, _, _ = forward(params, toks, arch)
+    b, _, _ = forward(params, toks, mixed)
+    assert np.any(np.asarray(a) != np.asarray(b))
+    assert np.all(np.isfinite(np.asarray(b)))
+
+
+def test_for_site_resolution_rules():
+    cim = CIMConfig(mode="grmac")
+    assert cim.for_site("attn_qkv") == dataclasses.replace(cim)
+    assert cim.for_site("head").enabled
+    # family not in apply_to -> off
+    narrow = dataclasses.replace(cim, apply_to=("ffn",))
+    assert not narrow.for_site("attn_qkv").enabled
+    assert narrow.for_site("mlp").enabled
+    # override wins over apply_to in both directions
+    on = narrow.override_site("attn_qkv", SiteDesign(granularity="unit"))
+    eff = on.for_site("attn_qkv")
+    assert eff.enabled and eff.granularity == "unit"
+    off = cim.override_site("mlp", "off")
+    assert not off.for_site("mlp").enabled
+    # a base-mode-off config with one analog override is "enabled"
+    lone = CIMConfig(mode="off").override_site(
+        "head", SiteDesign(mode="grmac"))
+    assert lone.enabled and lone.for_site("head").enabled
+    assert not lone.for_site("mlp").enabled
+
+
+# ------------------------------------------------------------- pricing
+def test_priced_report_skips_digital_sites():
+    arch = _tiny()
+    off_head = arch.replace(cim=arch.cim.override_site("head", "off"))
+    full = costs.price_ledger(costs.trace_decode(arch), 1, n_cols=1 << 7)
+    part = costs.price_ledger(costs.trace_decode(off_head), 1,
+                              n_cols=1 << 7)
+    # same structural ops, fewer analog ops, strictly less energy
+    assert part["ops_per_token"] == full["ops_per_token"]
+    assert part["analog_ops_per_token"] < full["analog_ops_per_token"]
+    assert part["pj_per_token"] < full["pj_per_token"]
+    assert part["sites"]["head"]["mode"] == "off"
+    assert part["sites"]["head"]["pj_per_token"] == 0.0
+
+
+def test_explore_sites_sweeps_the_ledger():
+    from repro.core.dse import explore_sites
+    arch = _tiny()
+    ledger = costs.trace_decode(arch)
+    res = explore_sites(arch.cim, ledger, n_cols=1 << 7)
+    assert set(res["sites"]) == set(ledger.sites())
+    # the sweep can only improve on (or match) the base deployment
+    assert res["pj"] <= res["base_pj"]
+    for s in res["sites"].values():
+        assert s.get("granularity") in ("row", "unit", "conv", None)
+    # the composed config resolves to the winning designs
+    for site, s in res["sites"].items():
+        if "granularity" in s:
+            assert res["config"].for_site(site).granularity == \
+                s["granularity"]
+
+
+def test_recording_is_inert_outside_context():
+    """cim_matmul outside a recording context must not accumulate state
+    (the serving/training hot paths pay one list check, nothing else)."""
+    arch = _tiny()
+    params = init_params(jax.random.PRNGKey(0), arch)
+    toks = jnp.ones((1, 4), jnp.int32)
+    forward(params, toks, arch)               # no context active
+    led = costs.CostLedger()
+    with costs.recording(led):
+        jax.eval_shape(lambda p, t: forward(p, t, arch), params, toks)
+    assert len(led) > 0
+    n = len(led)
+    forward(params, toks, arch)               # after the context closed
+    assert len(led) == n

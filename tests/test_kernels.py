@@ -237,6 +237,46 @@ def test_autotune_cache_round_trip(tmp_path, monkeypatch):
     clear_plan_cache()
 
 
+def test_plan_cache_version_mismatch_ignored(tmp_path, monkeypatch):
+    """A plan cache written under a different schema version — including a
+    pre-versioned flat dict — is ignored with a warning, not served: its
+    plans may have been measured under different rules. The next persisted
+    plan rewrites the file under the current version."""
+    import json
+    import warnings
+
+    from repro.kernels.dispatch import PLAN_CACHE_VERSION, _plan_key
+
+    if jax.default_backend() == "tpu":
+        pytest.skip("heuristic plans pallas on TPU; test pins xla/tiled")
+    cache = tmp_path / "plans.json"
+    key = _plan_key(16, 96, 64, "row", _FMT_KW["fmt_x"], _FMT_KW["fmt_w"], 32)
+    stale = {"backend": "ref", "tile_m": 0, "tile_n": 0, "warm_us": 1.0}
+    monkeypatch.setenv("REPRO_GRMAC_PLAN_CACHE", str(cache))
+    monkeypatch.delenv("REPRO_GRMAC_BACKEND", raising=False)
+    monkeypatch.delenv("REPRO_GRMAC_AUTOTUNE", raising=False)
+
+    for payload in (
+        {key: stale},                                     # pre-versioned
+        {"version": PLAN_CACHE_VERSION + 1, "plans": {key: stale}},
+    ):
+        cache.write_text(json.dumps(payload))
+        clear_plan_cache()
+        with warnings.catch_warnings(record=True) as caught:
+            warnings.simplefilter("always")
+            plan = plan_for(16, 96, 64, granularity="row", **_FMT_KW)
+        assert plan.source == "heuristic"      # stale "ref" plan NOT served
+        assert plan.backend == "xla"
+        assert any("plan cache" in str(w.message) for w in caught)
+
+    # a current-version cache IS served
+    cache.write_text(json.dumps(
+        {"version": PLAN_CACHE_VERSION, "plans": {key: stale}}))
+    clear_plan_cache()
+    assert plan_for(16, 96, 64, granularity="row", **_FMT_KW).source == "cache"
+    clear_plan_cache()
+
+
 def test_auto_dispatch_matches_ref_under_jit(monkeypatch):
     """backend="auto" plans inside jit traces (no probing) and the planned
     backend keeps the 0-ulp contract."""

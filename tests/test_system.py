@@ -26,12 +26,15 @@ def test_engine_prefill_decode():
     eng = Engine(arch, params, ServeConfig(batch_slots=2, max_ctx=64))
     s0 = eng.add_request([1, 2, 3])
     s1 = eng.add_request([7, 8])
+    # the first output token is sampled from the prefill logits (no
+    # re-feed of the last prompt token), so add_request already emits one
+    assert len(eng.tokens[s0]) == 3 + 1
     toks = []
     for _ in range(8):
         out = eng.step()
         toks.append(out)
     assert all(s0 in o and s1 in o for o in toks)
-    assert len(eng.tokens[s0]) == 3 + 8
+    assert len(eng.tokens[s0]) == 3 + 1 + 8
     assert all(0 <= t < arch.vocab_size for t in eng.tokens[s0])
 
 
