@@ -13,7 +13,13 @@ path:
   leaves) — **exact**: these are deterministic ledger traces of the model
   structure, so ANY drift from the committed record is a regression (the
   models changed without the committed energy record being refreshed, or
-  the cost accounting broke).
+  the cost accounting broke);
+* ``on_front`` / ``front_size`` (the e2e_pareto frontier-membership
+  leaves) — **exact**, same contract: Pareto fronts are derived from
+  seeded Monte-Carlo solves and trace op counts, so a committed front
+  reshuffling silently means the design-space explorer or the energy
+  model changed without the record being refreshed. A vanished front
+  candidate shows up as a missing ``on_front`` leaf.
 
 Cells faster than ``--min-us`` (default 300 us) in the committed record
 are skipped: at smoke sizes those measure pure dispatch overhead and are
@@ -31,7 +37,7 @@ reference machine and commit the JSONs) when a *deliberate* perf change
 moves them.
 
 Run:  PYTHONPATH=src python -m benchmarks.compare [--threshold 1.5]
-          [--min-us 300] [--bench kernel,serve] [--no-run]
+          [--min-us 300] [--bench kernel,serve,energy,pareto] [--no-run]
 """
 from __future__ import annotations
 
@@ -45,12 +51,14 @@ from benchmarks.common import RESULTS_DIR
 
 # timing leaves: key -> True when larger-is-better (throughput)
 _TIME_KEYS = {"warm_us": False, "ttft_ms": False, "decode_tok_s": True}
-# deterministic leaves compared with exact equality (op-count drift gate)
-_EXACT_KEYS = ("ops_per_token", "analog_ops_per_token")
+# deterministic leaves compared with exact equality (op-count drift gate +
+# e2e_pareto frontier-membership gate)
+_EXACT_KEYS = ("ops_per_token", "analog_ops_per_token", "on_front",
+               "front_size")
 # committed-value scale to microseconds, for the noise floor
 _TO_US = {"warm_us": 1.0, "ttft_ms": 1e3}
 
-_BENCHES = ("kernel", "serve", "energy")
+_BENCHES = ("kernel", "serve", "energy", "pareto")
 
 
 def _walk(tree, path=()):
@@ -151,6 +159,9 @@ def _fresh_run(bench: str):
     if bench == "energy":
         from benchmarks import e2e_energy
         return e2e_energy.run(**e2e_energy.SMOKE_PARAMS)
+    if bench == "pareto":
+        from benchmarks import e2e_energy
+        return e2e_energy.run_pareto(**e2e_energy.PARETO_SMOKE_PARAMS)
     from benchmarks import serve_bench
     return serve_bench.run(**serve_bench.SMOKE_PARAMS)
 
@@ -166,7 +177,7 @@ def run(benches=_BENCHES, threshold=1.5, min_us=300.0, fresh=True) -> list:
     steps)."""
     regressions = []
     names = {"kernel": "kernel_bench_smoke", "serve": "serve_bench_smoke",
-             "energy": "e2e_energy_smoke"}
+             "energy": "e2e_energy_smoke", "pareto": "e2e_pareto_smoke"}
     for bench in benches:
         name = names[bench]
         committed = _committed(name)
@@ -189,8 +200,8 @@ def main() -> None:
                     help="warm-time ratio above which a cell is a regression")
     ap.add_argument("--min-us", type=float, default=300.0,
                     help="skip committed cells faster than this (noise floor)")
-    ap.add_argument("--bench", default="kernel,serve,energy",
-                    help="comma list: kernel,serve,energy")
+    ap.add_argument("--bench", default="kernel,serve,energy,pareto",
+                    help="comma list: kernel,serve,energy,pareto")
     ap.add_argument("--no-run", action="store_true",
                     help="compare records already on disk instead of "
                          "running fresh --smoke benches")

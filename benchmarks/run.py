@@ -68,6 +68,7 @@ def main() -> None:
     kernel_bench.run(shapes={"edge_decode": kernel_bench._SHAPES["edge_decode"]},
                      record="kernel_bench_claims")
     e2e_energy.run()
+    e2e_energy.run_pareto()   # per-site fronts (launch/summary --energy)
 
     # bench-regression gate: fresh --smoke runs vs the committed records
     # (see benchmarks/compare.py; CI runs the same check per push). The

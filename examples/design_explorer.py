@@ -1,6 +1,8 @@
 """Interactive-ish design-space exploration: pick a workload's dynamic-range
 and precision needs, get the energy-optimal CIM configuration (the paper's
-Fig. 12 as a tool).
+Fig. 12 as a tool). For the per-*site* sweep over a traced model (formats ×
+n_r × granularity with accuracy budgets and Pareto fronts), see
+``examples/site_pareto.py``.
 
 Run:  PYTHONPATH=src python examples/design_explorer.py --sqnr 35 --dr 60
 """

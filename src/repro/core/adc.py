@@ -23,16 +23,18 @@ and is therefore fractional-valued.
 from __future__ import annotations
 
 import dataclasses
+import functools
 from typing import Optional, Union
 
 import jax
 import jax.numpy as jnp
 
-from .distributions import Distribution, max_entropy
-from .formats import FP4_E2M1, FPFormat, IntFormat, int_quantize, quantize
+from .distributions import Distribution, max_entropy, uniform
+from .formats import FP4_E2M1, FPFormat, IntFormat, quantize_any
 from .mac import gr_mac_row, gr_mac_unit, int_mac
 
-__all__ = ["EnobResult", "required_enob", "ARCHS"]
+__all__ = ["EnobResult", "required_enob", "solve_required_enob",
+           "narrowest_uniform", "ARCHS"]
 
 ARCHS = ("conv", "gr_row", "gr_unit")
 _MARGIN_DB = 6.0
@@ -46,12 +48,6 @@ class EnobResult:
     qnoise_power: float     # P(z_q - z_ref)
     mean_scale_sq: float    # E[scale²] of the renormalization factor
     n_eff_mean: Optional[float] = None  # GR only
-
-
-def _quantize_any(x: jax.Array, fmt: Union[FPFormat, IntFormat]) -> jax.Array:
-    if isinstance(fmt, IntFormat):
-        return int_quantize(x, fmt)
-    return quantize(x, fmt)
 
 
 def required_enob(
@@ -81,7 +77,7 @@ def required_enob(
         dist_w = max_entropy(fmt_w)
     w_q = dist_w(kw, shape)  # already on the weight grid for max-entropy
 
-    x_q = _quantize_any(x, fmt_x)
+    x_q = quantize_any(x, fmt_x)
 
     # Output-referred input-quantization noise (the budget reference).
     z_ref = jnp.sum(x * w_q, axis=-1)
@@ -119,3 +115,39 @@ def required_enob(
         mean_scale_sq=float(mean_scale_sq),
         n_eff_mean=n_eff_mean,
     )
+
+
+def narrowest_uniform(fmt: Union[FPFormat, IntFormat]) -> Distribution:
+    """Uniform input at the narrowest valid bounds of the format (§IV-B):
+    twice the minimum normal value for FP, full scale for INT. This is the
+    paper's reference input condition for dimensioning converters — the
+    worst case the static ENOB spec must be robust to."""
+    if isinstance(fmt, IntFormat):
+        return uniform(1.0)
+    return uniform(min(1.0, 2.0 * fmt.min_normal))
+
+
+@functools.lru_cache(maxsize=8192)
+def solve_required_enob(
+    arch: str,
+    fmt_x: Union[FPFormat, IntFormat],
+    n_r: int = 32,
+    fmt_w: FPFormat = FP4_E2M1,
+    n_cols: int = 1 << 14,
+    seed: int = 0,
+    margin_db: float = _MARGIN_DB,
+) -> EnobResult:
+    """Memoized ``required_enob`` at the paper's reference input condition.
+
+    Keyed on the FULL candidate tuple — (arch, fmt_x, n_r, fmt_w) plus the
+    sampling configuration (n_cols, seed, margin) — so the combinatorial
+    per-site DSE sweep (``core.dse.explore_pareto``: formats × n_r ×
+    granularity × every ledger site) pays each distinct Monte-Carlo solve
+    exactly once per process. The input distribution is always
+    ``narrowest_uniform(fmt_x)``; call ``required_enob`` directly for
+    custom distributions (it stays un-memoized: ``Distribution`` closures
+    are not hashable cache keys)."""
+    key = jax.random.PRNGKey(seed)
+    return required_enob(key, arch, narrowest_uniform(fmt_x), fmt_x,
+                         n_r=n_r, fmt_w=fmt_w, n_cols=n_cols,
+                         margin_db=margin_db)

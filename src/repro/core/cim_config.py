@@ -56,7 +56,7 @@ import dataclasses
 import functools
 from typing import Optional, Tuple, Union
 
-from .formats import FP4_E2M1, FP6_E3M2, FPFormat
+from .formats import FP4_E2M1, FP6_E3M2, FPFormat, IntFormat, parse_format
 
 __all__ = ["CIMConfig", "SiteDesign", "SITES", "site_family"]
 
@@ -100,11 +100,15 @@ def site_family(site: str) -> str:
 @dataclasses.dataclass(frozen=True)
 class SiteDesign:
     """A per-site design override: non-None fields replace the base
-    ``CIMConfig`` fields at that site (see ``CIMConfig.for_site``)."""
+    ``CIMConfig`` fields at that site (see ``CIMConfig.for_site``).
+
+    ``fmt_x`` may be an ``IntFormat``: the DSE sweep
+    (``core.dse.explore_pareto``) prices INT inputs through the ``gr_int``
+    energy arch, and the ENOB solver treats them as a single exponent bin."""
 
     mode: Optional[str] = None          # off | fakequant | grmac
     granularity: Optional[str] = None   # row | unit | conv
-    fmt_x: Optional[FPFormat] = None
+    fmt_x: Optional[Union[FPFormat, IntFormat]] = None
     fmt_w: Optional[FPFormat] = None
     n_r: Optional[int] = None
     enob: Optional[float] = None
@@ -114,12 +118,29 @@ class SiteDesign:
                 for f in dataclasses.fields(self)
                 if getattr(self, f.name) is not None}
 
+    # ------------------------------------------------------ serialization
+    def as_dict(self) -> dict:
+        """JSON-able dump (formats by name); inverse of ``from_dict``."""
+        out = self.as_kwargs()
+        for k in ("fmt_x", "fmt_w"):
+            if k in out:
+                out[k] = out[k].name
+        return out
+
+    @classmethod
+    def from_dict(cls, d: dict) -> "SiteDesign":
+        kw = dict(d)
+        for k in ("fmt_x", "fmt_w"):
+            if isinstance(kw.get(k), str):
+                kw[k] = parse_format(kw[k])
+        return cls(**kw)
+
 
 @dataclasses.dataclass(frozen=True)
 class CIMConfig:
     mode: str = "off"                  # off | fakequant | grmac
     granularity: str = "row"           # row | unit | conv
-    fmt_x: FPFormat = FP6_E3M2
+    fmt_x: Union[FPFormat, IntFormat] = FP6_E3M2
     fmt_w: FPFormat = FP4_E2M1
     n_r: int = 32                      # CIM array rows == matmul K-block
     enob: Optional[float] = None       # None -> solve from core.adc defaults
@@ -171,13 +192,34 @@ class CIMConfig:
         self, site: str, design: Union[str, SiteDesign]
     ) -> "CIMConfig":
         """Return a config with ``site`` overridden (replacing any existing
-        entry for the same site). ``design`` is ``"off"`` or a SiteDesign."""
+        entry for the same site). ``design`` is ``"off"`` or a SiteDesign.
+        ``site`` must be a canonical site label (``SITES``) or a legacy
+        family name — a typo'd site would otherwise silently never match
+        any model call site (and the deployment would not be the one the
+        user believes they configured)."""
+        if site not in _SITE_FAMILY:
+            raise ValueError(
+                f"unknown site {site!r}: expected one of {SITES} "
+                "or a legacy family name ('qkvo'/'ffn'/'expert'/'head')")
         if design != "off" and not isinstance(design, SiteDesign):
             raise TypeError(f"override must be 'off' or SiteDesign, "
                             f"got {design!r}")
         kept = tuple((s, d) for s, d in self.site_overrides if s != site)
         return dataclasses.replace(
             self, site_overrides=kept + ((site, design),))
+
+    def with_site_overrides(self, overrides) -> "CIMConfig":
+        """Apply a whole ``{site: "off" | SiteDesign}`` mapping (or an
+        iterable of pairs) at once — the shape ``core.dse.explore_pareto``
+        emits as its ready-to-apply chosen frontier. Later entries replace
+        earlier ones for the same site; sites are applied in the mapping's
+        iteration order."""
+        items = overrides.items() if hasattr(overrides, "items") \
+            else overrides
+        cfg = self
+        for site, design in items:
+            cfg = cfg.override_site(site, design)
+        return cfg
 
     # ------------------------------------------------------------ sugar
     def with_mode(self, mode: str) -> "CIMConfig":

@@ -64,9 +64,8 @@ from typing import Dict, List, Optional, Tuple
 import jax
 import jax.numpy as jnp
 
-from .adc import required_enob
+from .adc import solve_required_enob
 from .cim_config import CIMConfig
-from .distributions import uniform
 from .energy import CimDesign, TechParams, energy_per_op_fj
 from .formats import FPFormat, IntFormat
 
@@ -78,6 +77,8 @@ __all__ = [
     "trace_decode",
     "trace_prefill",
     "trace_train",
+    "default_train_seq",
+    "design_arch",
     "design_energy_fj",
     "price_ledger",
     "phase_report",
@@ -249,6 +250,15 @@ def trace_prefill(arch, bucket: int = 128, batch: int = 1,
     return ledger
 
 
+def default_train_seq(arch) -> int:
+    """The train-trace sequence length when the caller doesn't pin one:
+    long enough to cover an SSM chunk so the scan recurrence is exercised.
+    Single source of truth for every per-token normalization of a train
+    ledger (``phase_report``, ``benchmarks/e2e_energy.py``) — the divisor
+    must be the length the trace actually ran."""
+    return max(arch.ssm_chunk, 128) if "ssm" in arch.block_pattern else 128
+
+
 def trace_train(arch, batch: int = 1,
                 seq_len: Optional[int] = None) -> CostLedger:
     """Ledger of one train-step *forward* (value_and_grad traced; the STE
@@ -257,8 +267,7 @@ def trace_train(arch, batch: int = 1,
     from repro.models import train_loss
     arch = _trace_arch(arch)
     if seq_len is None:
-        seq_len = max(arch.ssm_chunk, 128) if "ssm" in arch.block_pattern \
-            else 128
+        seq_len = default_train_seq(arch)
     labels = jax.ShapeDtypeStruct((batch, seq_len), jnp.int32)
     params = _abstract_params(arch)
     ledger = CostLedger()
@@ -276,31 +285,36 @@ def trace_train(arch, batch: int = 1,
 
 
 # ----------------------------------------------------------------- pricing
-def _narrowest_uniform(fmt):
-    if isinstance(fmt, IntFormat):
-        return uniform(1.0)
-    return uniform(min(1.0, 2.0 * fmt.min_normal))
+def design_arch(granularity: str, fmt_x) -> str:
+    """Energy-model arch of a (granularity, input-format) pair: the GR
+    granularities price as ``gr_row`` / ``gr_unit`` for FP inputs and as
+    ``gr_int`` for INT inputs (no input exponent to range on — the gain
+    ranging runs off the static *weight* exponents, §III-C3)."""
+    arch = _GRAN_ARCH[granularity]
+    if arch != "conv" and isinstance(fmt_x, IntFormat):
+        return "gr_int"
+    return arch
 
 
-@functools.lru_cache(maxsize=256)
+@functools.lru_cache(maxsize=4096)
 def design_energy_fj(granularity: str, fmt_x, fmt_w, n_r: int, *,
                      n_cols: int = 1 << 11, seed: int = 0,
                      n_c: int = 32) -> dict:
     """fJ/Op of one (granularity, formats, n_r) design and of the
     conventional CIM processing the same tensors — the paper's §IV cost
-    model behind both. The required-ENOB Monte-Carlo is memoized per
-    design *and* per sampling configuration (seed, n_cols), so a changed
-    sampling setup can never be served a stale solve."""
-    key = jax.random.PRNGKey(seed)
-    dist = _narrowest_uniform(fmt_x)
-    arch = _GRAN_ARCH[granularity]
-    solver = "conv" if arch == "conv" else arch
-    res = required_enob(key, solver, dist, fmt_x, n_r=n_r, fmt_w=fmt_w,
-                        n_cols=n_cols)
+    model behind both. The required-ENOB Monte-Carlo
+    (``core.adc.solve_required_enob``) is memoized per design *and* per
+    sampling configuration (seed, n_cols), so a changed sampling setup can
+    never be served a stale solve and the combinatorial DSE sweep
+    (``core.dse.explore_pareto``) pays each distinct solve once."""
+    arch = design_arch(granularity, fmt_x)
+    # gr_int reuses the gr_unit solver semantics: an INT input carries a
+    # single exponent bin (see core.adc.required_enob docstring)
+    solver = {"conv": "conv", "gr_int": "gr_unit"}.get(arch, arch)
+    res = solve_required_enob(solver, fmt_x, n_r, fmt_w, n_cols, seed)
     e = energy_per_op_fj(CimDesign(arch, fmt_x, fmt_w, res.enob, n_r, n_c),
                          TechParams())
-    res_c = required_enob(key, "conv", dist, fmt_x, n_r=n_r, fmt_w=fmt_w,
-                          n_cols=n_cols)
+    res_c = solve_required_enob("conv", fmt_x, n_r, fmt_w, n_cols, seed)
     e_c = energy_per_op_fj(
         CimDesign("conv", fmt_x, fmt_w, res_c.enob, n_r, n_c), TechParams())
     return {
@@ -366,8 +380,7 @@ def phase_report(arch, *, batch: int = 1, prefill_bucket: int = 128,
     decode = trace_decode(arch, batch=batch)
     prefill = trace_prefill(arch, bucket=prefill_bucket, batch=batch)
     train = trace_train(arch, batch=batch, seq_len=train_seq)
-    train_tokens = batch * (train_seq or (
-        max(arch.ssm_chunk, 128) if "ssm" in arch.block_pattern else 128))
+    train_tokens = batch * (train_seq or default_train_seq(arch))
     return {
         "decode": price_ledger(decode, batch, seed=seed, n_cols=n_cols),
         "prefill": price_ledger(prefill, batch * prefill_bucket,

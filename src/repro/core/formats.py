@@ -34,6 +34,8 @@ __all__ = [
     "decompose",
     "compose",
     "int_quantize",
+    "quantize_any",
+    "parse_format",
     "sqnr_db",
     "measured_sqnr_db",
 ]
@@ -109,6 +111,24 @@ FP6_E2M3 = FPFormat(2, 3)
 FP6_E3M2 = FPFormat(3, 2)
 FP8_E4M3 = FPFormat(4, 3)
 
+
+def parse_format(name: str):
+    """Inverse of ``FPFormat.name`` / ``IntFormat.name``: ``"FP6_E3M2"`` or
+    ``"INT8"`` back to the format object (used to round-trip per-site
+    designs through JSON records)."""
+    if name.startswith("INT"):
+        return IntFormat(int(name[3:]))
+    try:
+        spec = name.split("_", 1)[1]          # "E3M2"
+        n_exp, n_man = spec[1:].split("M")
+        fmt = FPFormat(int(n_exp), int(n_man))
+    except (IndexError, ValueError) as e:
+        raise ValueError(f"unparseable format name {name!r}") from e
+    if fmt.name != name:
+        raise ValueError(f"format name {name!r} does not round-trip "
+                         f"(parsed as {fmt.name})")
+    return fmt
+
 _TINY = 1e-30
 
 
@@ -173,6 +193,15 @@ def int_quantize(x: jax.Array, fmt: IntFormat) -> jax.Array:
     lv = fmt.levels
     q = jnp.round(jnp.clip(x, -1.0, 1.0) * lv) / lv
     return q
+
+
+def quantize_any(x: jax.Array, fmt) -> jax.Array:
+    """Round-to-nearest onto either format family's grid: dispatches to
+    ``int_quantize`` for ``IntFormat`` and ``quantize`` for ``FPFormat``
+    (the DSE sweeps both; per-site overrides may carry either)."""
+    if isinstance(fmt, IntFormat):
+        return int_quantize(x, fmt)
+    return quantize(x, fmt)
 
 
 def sqnr_db(fmt: FPFormat) -> float:

@@ -48,7 +48,7 @@ import jax.numpy as jnp
 
 from repro.core import costs
 from repro.core.cim_config import CIMConfig
-from repro.core.formats import quantize
+from repro.core.formats import IntFormat, quantize, quantize_any
 
 from .dispatch import grmac_matmul, resolve_backend
 
@@ -68,8 +68,17 @@ def _cim_matmul_2d(x, w, cfg: CIMConfig, backend: str):
     xn = x32 / sx
     wn = w32 / sw
     if cfg.mode == "fakequant":
-        out = quantize(xn, cfg.fmt_x) @ quantize(wn, cfg.fmt_w)
+        # fmt_x may be an IntFormat (the DSE sweeps the INT ladder and
+        # per-site overrides can carry its choices); fmt_w is always FP
+        out = quantize_any(xn, cfg.fmt_x) @ quantize(wn, cfg.fmt_w)
     elif cfg.mode == "grmac":
+        if isinstance(cfg.fmt_x, IntFormat):
+            raise NotImplementedError(
+                "grmac execution with an IntFormat input is not "
+                "implemented (the gr_int signal chain is priced "
+                "analytically by core.costs/core.dse but has no kernel "
+                "backend): deploy INT per-site designs with "
+                "mode='fakequant', or pick an FP format")
         out = grmac_matmul(
             xn,
             quantize(wn, cfg.fmt_w),

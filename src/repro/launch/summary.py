@@ -1,6 +1,9 @@
 """Aggregate dry-run / roofline / energy JSON cells into the
 EXPERIMENTS.md tables (``--energy`` renders the ledger-derived per-phase
-pJ/token record written by ``benchmarks/e2e_energy.py``)."""
+pJ/token record written by ``benchmarks/e2e_energy.py``, plus — when the
+``e2e_pareto`` record exists — each arch's per-site Pareto frontier, the
+chosen ``site_overrides`` deployment, and the per-phase deployment-level
+energy/accuracy fronts from ``--pareto``)."""
 from __future__ import annotations
 
 import argparse
@@ -87,17 +90,69 @@ def energy_table(path: str):
             f"| {ph['decode']['ops_per_token']/1e9:.3f} |")
 
 
+def _fmt_design(d: dict) -> str:
+    return f"{d['fmt_x']}/n{d['n_r']}/{d['granularity']}"
+
+
+def pareto_table(path: str):
+    """Per-arch per-site Pareto frontier (decode phase) + the chosen
+    ``site_overrides`` deployment and the per-phase deployment-level
+    energy/accuracy fronts, from the ``--pareto`` record."""
+    try:
+        with open(path) as f:
+            recs = json.load(f)
+    except OSError:
+        return
+    for arch, rec in sorted(recs.items()):
+        dec = rec["phases"]["decode"]
+        print(f"\n### {arch} — per-site frontier @ decode "
+              f"(budget {rec['budget_sqnr_db']:.1f} dB)")
+        print("| site | GOps/tok | chosen | fJ/Op | SQNR dB | "
+              "front (fJ/Op @ dB) |")
+        print("|---|---|---|---|---|---|")
+        for site, s in sorted(dec["sites"].items()):
+            if s.get("mode") == "off" or "front" not in s:
+                print(f"| {site} | {s['ops_per_token']/1e9:.3f} | off "
+                      "| | | |")
+                continue
+            chosen = s["chosen"]
+            front = " → ".join(
+                f"{c['fj_per_op']:.1f}@{c['sqnr_db']:.1f}"
+                for c in s["front"].values())
+            fj = s["chosen_fj_per_op"]
+            sq = next((c["sqnr_db"] for k, c in s["front"].items()
+                       if k == chosen), None)
+            print(f"| {site} | {s['ops_per_token']/1e9:.3f} | {chosen} "
+                  f"| {fj:.1f} | {sq:.1f} | {front} |"
+                  if fj is not None else
+                  f"| {site} | {s['ops_per_token']/1e9:.3f} | {chosen} "
+                  f"| | | {front} |")
+        ov = dec["site_overrides"]
+        print("site_overrides: "
+              + json.dumps(ov, sort_keys=True, default=str))
+        for phase, ph in rec["phases"].items():
+            pts = " → ".join(
+                f"{k}:{p['pj_per_token']:.0f}pJ"
+                for k, p in ph["front"].items())
+            print(f"{phase}: chosen {ph['pj_per_token']:.0f} pJ/tok "
+                  f"(base {ph['base_pj_per_token']:.0f}) | front: {pts}")
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--dir", default="experiments/dryrun")
     ap.add_argument("--roofline", action="store_true")
     ap.add_argument("--energy", action="store_true",
-                    help="render experiments/bench/e2e_energy.json")
+                    help="render experiments/bench/e2e_energy.json (+ the "
+                         "e2e_pareto frontier record when present)")
     ap.add_argument("--energy-record",
                     default="experiments/bench/e2e_energy.json")
+    ap.add_argument("--pareto-record",
+                    default="experiments/bench/e2e_pareto.json")
     args = ap.parse_args()
     if args.energy:
         energy_table(args.energy_record)
+        pareto_table(args.pareto_record)
         return
     rows = load(args.dir, args.roofline)
     if args.roofline:

@@ -1,0 +1,249 @@
+"""Per-site (format × n_r × granularity) Pareto DSE regression net.
+
+1. Dominance correctness on a hand-built 3-point front.
+2. Budget-infeasible sites fall back to "off" with a UserWarning.
+3. The emitted ``site_overrides`` round-trip through
+   ``CIMConfig.for_site`` bit-identically (the chosen candidate IS the
+   design the config resolves — pricing and policy can't disagree).
+4. ``explore_sites`` (granularity-only at base formats) is reproduced by
+   ``explore_pareto`` as the degenerate sweep.
+5. The memoized solver (``core.adc.solve_required_enob``) matches the
+   direct Monte-Carlo solve and is served from cache on re-query.
+"""
+import warnings
+
+import jax
+import pytest
+
+from repro.configs import get_config
+from repro.core import costs
+from repro.core.adc import required_enob, solve_required_enob, \
+    narrowest_uniform
+from repro.core.cim_config import SiteDesign
+from repro.core.dse import (GAIN_RANGE_LIMIT_BITS, SiteBudget,
+                            deployment_front, explore_pareto,
+                            explore_sites, pareto_front, spec_of_format)
+from repro.core.formats import FP6_E3M2, FPFormat, IntFormat, parse_format
+
+# small grids keep the test sweep to a handful of Monte-Carlo solves; the
+# FULL ladder runs (and is gated) in the CI bench-smoke lane
+_FMTS = (FP6_E3M2, FPFormat(2, 5), IntFormat(8))
+_NRS = (16, 32)
+_NC = 1 << 7
+
+
+def _tiny(mode="grmac"):
+    arch = get_config("paper-cim-120m").replace(
+        n_layers=2, d_model=128, n_heads=4, n_kv_heads=4, d_head=32,
+        d_ff=256, vocab_size=512)
+    return arch.replace(cim=arch.cim.with_mode(mode))
+
+
+# ----------------------------------------------------------- dominance
+class _P:
+    def __init__(self, fj, db):
+        self.fj_per_op = fj
+        self.sqnr_db = db
+
+
+def test_pareto_front_three_point_dominance():
+    a, b, c = _P(1.0, 10.0), _P(2.0, 20.0), _P(3.0, 15.0)
+    # c is dominated by b (more energy, less accuracy); a and b trade off
+    front = pareto_front([c, b, a])
+    assert front == [a, b]
+    # equal energy, lower accuracy is dominated; equal both keeps first
+    d, e = _P(1.0, 5.0), _P(2.0, 20.0)
+    assert pareto_front([a, d]) == [a]
+    assert pareto_front([b, e]) == [b]
+    # a point dominating everything is the whole front
+    s = _P(0.5, 30.0)
+    assert pareto_front([s, a, b, c]) == [s]
+
+
+def test_deployment_front_monotone():
+    arch = _tiny()
+    ledger = costs.trace_decode(arch)
+    res = explore_pareto(arch.cim, ledger, formats=_FMTS, n_r_set=_NRS,
+                         budget=None, n_cols=_NC)
+    front = res["front"]
+    assert front, "deployment front must not be empty for a feasible sweep"
+    pjs = [p["pj"] for p in front]
+    dbs = [p["sqnr_db"] for p in front]
+    # along the front: accuracy strictly up, energy strictly up
+    assert dbs == sorted(dbs) and len(set(dbs)) == len(dbs)
+    assert pjs == sorted(pjs) and len(set(pjs)) == len(pjs)
+    # every front point's choices cover every swept site
+    swept = [s for s, i in res["sites"].items() if "front" in i]
+    for p in front:
+        assert set(p["choices"]) == set(swept)
+
+
+# -------------------------------------------------------------- budgets
+def test_budget_infeasible_sites_fall_back_off_with_warning():
+    arch = _tiny()
+    ledger = costs.trace_decode(arch)
+    with pytest.warns(UserWarning, match="accuracy budget"):
+        res = explore_pareto(arch.cim, ledger, formats=_FMTS, n_r_set=_NRS,
+                             budget=SiteBudget(min_sqnr_db=1000.0),
+                             n_cols=_NC)
+    assert res["site_overrides"], "swept sites must emit overrides"
+    assert all(ov == "off" for ov in res["site_overrides"].values())
+    assert res["pj"] == 0.0 and res["base_pj"] > 0.0
+    assert res["front"] == []
+    for site in res["site_overrides"]:
+        assert not res["config"].for_site(site).enabled
+
+
+def test_budget_filters_formats_and_enob_floor_converts():
+    # 35 dB excludes FP6_E3M2 (22.8 dB) but admits FP8_E2M5 (40.9) & INT8
+    assert spec_of_format(FP6_E3M2)[1] < 35.0 < spec_of_format(
+        FPFormat(2, 5))[1]
+    b = SiteBudget(min_sqnr_db=35.0)
+    assert not b.admits(spec_of_format(FP6_E3M2)[1])
+    assert b.admits(spec_of_format(FPFormat(2, 5))[1])
+    # an ENOB floor converts through 6.02·N + 1.76 and the stricter wins
+    both = SiteBudget(min_sqnr_db=20.0, min_enob=6.0)
+    assert both.floor_db() == pytest.approx(6.02 * 6 + 1.76)
+    assert SiteBudget(None, None).floor_db() is None
+    arch = _tiny()
+    ledger = costs.trace_decode(arch)
+    res = explore_pareto(arch.cim, ledger, formats=_FMTS, n_r_set=_NRS,
+                         budget=b, n_cols=_NC)
+    for info in res["sites"].values():
+        if "front" not in info:
+            continue
+        assert info["budget_sqnr_db"] == 35.0
+        for c in info["front"]:
+            assert c["sqnr_db"] >= 35.0
+
+
+# ------------------------------------------------------------ roundtrip
+def test_emitted_overrides_roundtrip_through_for_site():
+    arch = _tiny()
+    ledger = costs.trace_decode(arch)
+    res = explore_pareto(arch.cim, ledger, formats=_FMTS, n_r_set=_NRS,
+                         n_cols=_NC)
+    cfg = res["config"]
+    assert cfg == arch.cim.with_site_overrides(res["site_overrides"])
+    for site, info in res["sites"].items():
+        if "front" not in info or isinstance(info["chosen"], str):
+            continue
+        chosen = info["chosen"]
+        eff = cfg.for_site(site)
+        assert eff.granularity == chosen["granularity"]
+        assert eff.fmt_x.name == chosen["fmt_x"]
+        assert eff.n_r == chosen["n_r"]
+        # and pricing the resolved config reproduces the chosen energy
+        # bit-identically (same memoized solve)
+        pt = costs.design_energy_fj(eff.granularity, eff.fmt_x, eff.fmt_w,
+                                    eff.n_r, n_cols=_NC, seed=0)
+        assert pt["fj_per_op"] == chosen["fj_per_op"]
+        assert pt["enob"] == chosen["enob"]
+        # the SiteDesign serializes and parses back to the same override
+        ov = res["site_overrides"][site]
+        assert SiteDesign.from_dict(ov.as_dict()) == ov
+
+
+def test_parse_format_roundtrip():
+    for fmt in (FP6_E3M2, FPFormat(2, 5), IntFormat(8), IntFormat(4)):
+        assert parse_format(fmt.name) == fmt
+    with pytest.raises(ValueError):
+        parse_format("FP8_E9M9")   # name does not round-trip
+    with pytest.raises(ValueError):
+        parse_format("bogus")
+
+
+# ------------------------------------------------- degenerate sweep
+def test_degenerate_sweep_reproduces_explore_sites():
+    arch = _tiny()
+    ledger = costs.trace_decode(arch)
+    base = arch.cim
+    with warnings.catch_warnings():
+        warnings.simplefilter("error")     # degenerate mode must not warn
+        deg = explore_pareto(base, ledger, formats=(base.fmt_x,),
+                             n_r_set=(base.n_r,), budget=None, n_cols=_NC)
+    es = explore_sites(base, ledger, n_cols=_NC)
+    assert deg["pj"] == es["pj"]
+    assert deg["base_pj"] == es["base_pj"]
+    for site, s in es["sites"].items():
+        d = deg["sites"][site]
+        if "granularity" not in s:          # digital site in both
+            assert d.get("mode") == "off"
+            continue
+        chosen = d["chosen"]
+        got_gran = chosen if isinstance(chosen, str) \
+            else chosen["granularity"]
+        assert got_gran == s["granularity"], site
+        if not isinstance(chosen, str):
+            assert chosen["fj_per_op"] == s["fj_per_op"]
+            assert chosen["fmt_x"] == base.fmt_x.name
+            assert chosen["n_r"] == base.n_r
+
+
+# ----------------------------------------------- applying INT overrides
+def test_int_override_runs_fakequant_and_fails_loudly_grmac():
+    """An IntFormat per-site choice from the sweep is executable under
+    fakequant (QAT of the gr_int deployment); grmac has no gr_int kernel
+    backend and must say so instead of crashing mid-decompose."""
+    import numpy as np
+    from repro.models import forward, init_params
+    arch = _tiny("fakequant")
+    ov = SiteDesign(fmt_x=IntFormat(8), granularity="row", n_r=32)
+    cfg = arch.cim.override_site("mlp", ov)
+    assert cfg.for_site("mlp").fmt_x == IntFormat(8)
+    mixed = arch.replace(cim=cfg)
+    params = init_params(jax.random.PRNGKey(0), arch)
+    toks = jax.random.randint(jax.random.PRNGKey(1), (1, 4), 0,
+                              arch.vocab_size)
+    a, _, _ = forward(params, toks, arch)
+    b, _, _ = forward(params, toks, mixed)
+    assert np.all(np.isfinite(np.asarray(b)))
+    assert np.any(np.asarray(a) != np.asarray(b))  # the site really moved
+    grmac = _tiny("grmac")
+    bad = grmac.replace(cim=grmac.cim.override_site("mlp", ov))
+    with pytest.raises(NotImplementedError, match="gr_int"):
+        forward(params, toks, bad)
+
+
+def test_override_site_rejects_unknown_site():
+    arch = _tiny()
+    with pytest.raises(ValueError, match="unknown site"):
+        arch.cim.override_site("attn_kqv", "off")   # typo'd label
+    # canonical sites and legacy family names both pass
+    arch.cim.override_site("attn_qkv", "off")
+    arch.cim.override_site("ffn", "off")
+
+
+# ------------------------------------------------------------ solver memo
+def test_solver_memo_matches_direct_solve_and_caches():
+    fmt = FP6_E3M2
+    direct = required_enob(jax.random.PRNGKey(0), "gr_row",
+                           narrowest_uniform(fmt), fmt, n_r=16,
+                           n_cols=_NC)
+    memo = solve_required_enob("gr_row", fmt, 16, n_cols=_NC, seed=0)
+    assert memo.enob == direct.enob
+    assert memo.mean_scale_sq == direct.mean_scale_sq
+    # cache hit: the very same result object comes back
+    assert solve_required_enob("gr_row", fmt, 16, n_cols=_NC, seed=0) \
+        is memo
+
+
+def test_gain_range_prunes_wide_exponents_at_every_n_r():
+    """The coupling-ladder limit is n_r-invariant: FP8_E4M3 (e_max=15) can
+    only enter the space through conv, at any depth."""
+    from repro.core.energy import CimDesign
+    from repro.core.formats import FP8_E4M3, FP4_E2M1
+    for n_r in (16, 32, 64, 128):
+        d = CimDesign("gr_row", FP8_E4M3, FP4_E2M1, 0.0, n_r)
+        assert d.gain_range_bits > GAIN_RANGE_LIMIT_BITS
+        c = CimDesign("conv", FP8_E4M3, FP4_E2M1, 0.0, n_r)
+        assert c.gain_range_bits == 0
+    arch = _tiny()
+    ledger = costs.trace_decode(arch)
+    res = explore_pareto(arch.cim, ledger, formats=(FP8_E4M3,),
+                         n_r_set=(16, 32), budget=None, n_cols=_NC)
+    for info in res["sites"].values():
+        if "front" not in info:
+            continue
+        for c in info["front"]:
+            assert c["granularity"] == "conv"
