@@ -20,6 +20,12 @@ path:
   reshuffling silently means the design-space explorer or the energy
   model changed without the record being refreshed. A vanished front
   candidate shows up as a missing ``on_front`` leaf.
+* the ``--bench audit`` leaves (``experiments/audit/audit_report.json``,
+  see ``src/repro/analysis``) — **exact**: jaxpr MAC counts, ledger
+  cross-check totals, and engine compile/transfer counters are structural
+  facts about the traced programs, so any drift from the committed golden
+  means ledger coverage or a hot-path invariant changed without the
+  golden being regenerated.
 
 Cells faster than ``--min-us`` (default 300 us) in the committed record
 are skipped: at smoke sizes those measure pure dispatch overhead and are
@@ -52,13 +58,26 @@ from benchmarks.common import RESULTS_DIR
 # timing leaves: key -> True when larger-is-better (throughput)
 _TIME_KEYS = {"warm_us": False, "ttft_ms": False, "decode_tok_s": True}
 # deterministic leaves compared with exact equality (op-count drift gate +
-# e2e_pareto frontier-membership gate)
+# e2e_pareto frontier-membership gate + the static-analysis audit report —
+# every audit leaf is a structural count over jaxpr traces, so any drift
+# means ledger coverage changed without the golden being refreshed)
 _EXACT_KEYS = ("ops_per_token", "analog_ops_per_token", "on_front",
-               "front_size")
+               "front_size",
+               # audit report leaves (experiments/audit/audit_report.json)
+               "dot_generals", "convs", "tagged_values", "tagged_gains",
+               "tagged_other", "declared_digital", "transposes", "untagged",
+               "ledger_mismatches", "dtype_f32", "dtype_bf16", "calls",
+               "macs", "ledger", "traced", "compiles", "fetches", "steps",
+               "violations", "failures")
 # committed-value scale to microseconds, for the noise floor
 _TO_US = {"warm_us": 1.0, "ttft_ms": 1e3}
 
+# "audit" is gated by its own CI lane (which writes the report first and
+# compares with --no-run), so it is not in the default bench set.
 _BENCHES = ("kernel", "serve", "energy", "pareto")
+
+# records that don't live under experiments/bench/
+_REL_OVERRIDE = {"audit_report": "experiments/audit/audit_report.json"}
 
 
 def _walk(tree, path=()):
@@ -117,7 +136,7 @@ def _committed(name: str) -> dict:
     working-tree JSON, so reading the file would make any *second* compare
     invocation (or --no-run) diff a record against itself and pass
     vacuously. Falls back to the working-tree file outside a checkout."""
-    rel = f"experiments/bench/{name}.json"
+    rel = _REL_OVERRIDE.get(name, f"experiments/bench/{name}.json")
     root = os.path.abspath(os.path.join(RESULTS_DIR, "..", ".."))
     try:
         blob = subprocess.run(
@@ -131,8 +150,13 @@ def _committed(name: str) -> dict:
 
 def _on_disk(name: str) -> dict:
     """The working-tree record (what a just-finished smoke run wrote)."""
+    if name in _REL_OVERRIDE:
+        root = os.path.abspath(os.path.join(RESULTS_DIR, "..", ".."))
+        path = os.path.join(root, _REL_OVERRIDE[name])
+    else:
+        path = os.path.join(RESULTS_DIR, f"{name}.json")
     try:
-        with open(os.path.join(RESULTS_DIR, f"{name}.json")) as f:
+        with open(path) as f:
             return json.load(f)
     except (OSError, ValueError):
         return {}
@@ -162,6 +186,10 @@ def _fresh_run(bench: str):
     if bench == "pareto":
         from benchmarks import e2e_energy
         return e2e_energy.run_pareto(**e2e_energy.PARETO_SMOKE_PARAMS)
+    if bench == "audit":
+        from repro.analysis.cli import build_report
+        from repro.configs import list_configs
+        return build_report(list(list_configs()), verbose=False)
     from benchmarks import serve_bench
     return serve_bench.run(**serve_bench.SMOKE_PARAMS)
 
@@ -177,7 +205,8 @@ def run(benches=_BENCHES, threshold=1.5, min_us=300.0, fresh=True) -> list:
     steps)."""
     regressions = []
     names = {"kernel": "kernel_bench_smoke", "serve": "serve_bench_smoke",
-             "energy": "e2e_energy_smoke", "pareto": "e2e_pareto_smoke"}
+             "energy": "e2e_energy_smoke", "pareto": "e2e_pareto_smoke",
+             "audit": "audit_report"}
     for bench in benches:
         name = names[bench]
         committed = _committed(name)
@@ -201,7 +230,10 @@ def main() -> None:
     ap.add_argument("--min-us", type=float, default=300.0,
                     help="skip committed cells faster than this (noise floor)")
     ap.add_argument("--bench", default="kernel,serve,energy,pareto",
-                    help="comma list: kernel,serve,energy,pareto")
+                    help="comma list: kernel,serve,energy,pareto,audit "
+                         "(audit gates experiments/audit/audit_report.json "
+                         "exactly; its CI lane runs the CLI then this with "
+                         "--no-run)")
     ap.add_argument("--no-run", action="store_true",
                     help="compare records already on disk instead of "
                          "running fresh --smoke benches")

@@ -5,7 +5,6 @@ exponent bits for outlier-heavy data, (ii) the Gaussian+outliers CORE is
 unresolved (near-zero SQNR) until N_E,x >= 3, then plateaus at N_E,x = 4.
 """
 import jax
-import jax.numpy as jnp
 
 from repro.core import distributions as D
 from repro.core import formats as F

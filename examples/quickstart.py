@@ -10,7 +10,7 @@ Run:  PYTHONPATH=src python examples/quickstart.py
 import jax
 import jax.numpy as jnp
 
-from repro.core import FP4_E2M1, FP6_E3M2, adc_quantize
+from repro.core import FP4_E2M1, FP6_E3M2
 from repro.core.adc import required_enob
 from repro.core.cim_config import CIMConfig
 from repro.core.distributions import gaussian_outliers, uniform

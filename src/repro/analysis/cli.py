@@ -1,0 +1,99 @@
+"""CLI for the static-analysis passes: ``python -m repro.analysis``.
+
+Runs the jaxpr ledger audit over the requested configs × phases, plus the
+engine invariant harness (unless ``--no-invariants``), and writes one
+machine-readable JSON report. Exit status is the number of failing
+configs' findings clamped to 1 — nonzero on any untagged MAC, ledger
+mismatch, dtype-promotion flag, or invariant violation — so the CI audit
+lane can gate on it directly.
+
+    PYTHONPATH=src python -m repro.analysis --all-configs \
+        --out experiments/audit/audit_report.json
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+from typing import List, Optional
+
+__all__ = ["main", "build_report"]
+
+DEFAULT_OUT = "experiments/audit/audit_report.json"
+PHASES = ("prefill", "decode", "train")
+
+
+def build_report(config_names: List[str], phases=PHASES, *,
+                 invariants: bool = True, verbose: bool = True) -> dict:
+    from repro.analysis import invariants as inv
+    from repro.analysis.jaxpr_audit import audit_arch
+    from repro.configs import get_config
+
+    report = {"schema": 1, "phases": list(phases), "configs": {}}
+    failures = 0
+    for name in sorted(config_names):
+        arch = get_config(name)
+        res = audit_arch(arch, phases)
+        report["configs"][name] = res
+        failures += res["failures"]
+        if verbose:
+            tot = {k: sum(ph[k] for ph in res["phases"].values())
+                   for k in ("dot_generals", "tagged_values",
+                             "declared_digital", "untagged",
+                             "ledger_mismatches")}
+            print(f"[audit] {name}: {tot['dot_generals']} dots = "
+                  f"{tot['tagged_values']} tagged + "
+                  f"{tot['declared_digital']} declared-digital "
+                  f"(+gains/transposes) | untagged={tot['untagged']} "
+                  f"mismatches={tot['ledger_mismatches']} "
+                  f"failures={res['failures']}")
+    if invariants:
+        res = inv.run_invariants()
+        report["invariants"] = res
+        failures += res["violations"]
+        if verbose:
+            print(f"[audit] invariants: {res['violations']} violations "
+                  f"across {len(res['configs'])} configs")
+    report["failures"] = failures
+    return report
+
+
+def main(argv: Optional[List[str]] = None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="python -m repro.analysis",
+        description="Ledger-completeness audit + hot-path invariant checks")
+    ap.add_argument("--configs", nargs="*", default=None,
+                    help="config names to audit (default: paper-cim-120m)")
+    ap.add_argument("--all-configs", action="store_true",
+                    help="audit every registered config")
+    ap.add_argument("--phases", nargs="*", default=list(PHASES),
+                    choices=list(PHASES))
+    ap.add_argument("--out", default=None,
+                    help=f"write the JSON report (CI uses {DEFAULT_OUT})")
+    ap.add_argument("--no-invariants", action="store_true",
+                    help="skip the engine invariant harness")
+    args = ap.parse_args(argv)
+
+    from repro.configs import list_configs
+    if args.all_configs:
+        names = list(list_configs())
+    elif args.configs:
+        names = list(args.configs)
+    else:
+        names = ["paper-cim-120m"]
+
+    report = build_report(names, tuple(args.phases),
+                          invariants=not args.no_invariants)
+    if args.out:
+        os.makedirs(os.path.dirname(args.out) or ".", exist_ok=True)
+        with open(args.out, "w") as f:
+            json.dump(report, f, indent=1, sort_keys=True)
+            f.write("\n")
+        print(f"[audit] report -> {args.out}")
+    if report["failures"]:
+        print(f"[audit] FAILED: {report['failures']} findings",
+              file=sys.stderr)
+        return 1
+    print("[audit] OK: ledger complete, invariants hold")
+    return 0

@@ -1,0 +1,161 @@
+"""Hot-path invariant checks for the serving engine.
+
+Two properties were won in earlier iterations and must never regress
+silently (see the "Machine-checked invariants" section of
+``serving/engine.py``):
+
+1. **Compile budget** — at most ONE trace per (arch, sampling-mode) decode
+   executable and per (arch, bucket) prefill executable. Shape drift,
+   accidental weak keys, or a per-engine ``jax.jit`` would show up as a
+   second trace of the same key.
+2. **One D2H transfer per decode step** — the host sees exactly one
+   ``(batch_slots,)`` int32 fetch per ``step`` (and per prefill
+   first-token selection), all routed through ``Engine._fetch``. (A
+   ``jax.transfer_guard`` cannot enforce this on the CPU backend — it is
+   a no-op there — so the harness counts the designed transfer point
+   instead.)
+
+``InstrumentedEngine`` interposes on the engine's dedicated seams
+(``_compiled_decode`` / ``_compiled_prefill`` / ``_fetch``): the raw step
+bodies are wrapped in a trace counter *before* jitting, so every
+(re)trace increments a counter while the compiled fast path stays
+untouched. ``check()`` raises ``InvariantViolation`` on any breach;
+``run_invariants`` drives a deterministic serve script over a reduced
+arch subset covering the attention, RG-LRU and SSM cache families.
+"""
+from __future__ import annotations
+
+from typing import Dict, List, Optional
+
+import jax
+import numpy as np
+
+from repro.serving.engine import Engine, ServeConfig, _decode_raw, _prefill_raw
+
+__all__ = ["InvariantViolation", "InstrumentedEngine", "run_invariants",
+           "INVARIANT_CONFIGS"]
+
+# Reduced-arch subset covering the three cache families (attention KV,
+# RG-LRU recurrent, SSM state) — the shapes that have historically driven
+# retraces and extra transfers.
+INVARIANT_CONFIGS = ("qwen2-1.5b", "recurrentgemma-9b", "mamba2-1.3b")
+
+
+class InvariantViolation(AssertionError):
+    """A machine-checked hot-path invariant was breached."""
+
+
+class InstrumentedEngine(Engine):
+    """Engine with compile/transfer counters on the hot-path seams.
+
+    Uses engine-local jits (one per key) wrapping the *same* raw bodies
+    the production executables compile, so a retrace of any key is a real
+    retracing regression, not cache pollution from other engines/tests.
+    """
+
+    def __init__(self, *args, **kwargs):
+        self.trace_counts: Dict[str, int] = {}
+        self.fetches = 0
+        self.steps_checked = 0
+        self._jits: Dict[str, object] = {}
+        super().__init__(*args, **kwargs)
+
+    def _counting_jit(self, key: str, raw):
+        if key not in self._jits:
+            counts = self.trace_counts
+
+            def counted(*a, **kw):
+                counts[key] = counts.get(key, 0) + 1
+                return raw(*a, **kw)
+
+            self._jits[key] = jax.jit(counted)
+        return self._jits[key]
+
+    def _compiled_decode(self, sample: bool):
+        return self._counting_jit(f"decode[sample={sample}]",
+                                  _decode_raw(self.arch, sample))
+
+    def _compiled_prefill(self, bucket: int):
+        return self._counting_jit(f"prefill[bucket={bucket}]",
+                                  _prefill_raw(self.arch, bucket))
+
+    def _fetch(self, ids_dev) -> np.ndarray:  # instance over staticmethod
+        self.fetches += 1
+        return Engine._fetch(ids_dev)
+
+    def step(self, key: Optional[jax.Array] = None):
+        before = self.fetches
+        live = bool(self.active.any())
+        result = super().step(key)
+        delta = self.fetches - before
+        want = 1 if live else 0
+        if delta != want:
+            raise InvariantViolation(
+                f"decode step performed {delta} device->host transfers "
+                f"(expected exactly {want}): every host-visible value must "
+                "route through the single Engine._fetch of sampled ids")
+        self.steps_checked += 1
+        return result
+
+    def check(self) -> dict:
+        """Assert the compile budget; return the counter report."""
+        over = {k: c for k, c in self.trace_counts.items() if c > 1}
+        if over:
+            raise InvariantViolation(
+                f"executables traced more than once: {over} — a retrace "
+                "of a cached (arch, bucket)/(arch, sample) key means the "
+                "jit key or input shapes drifted (the PR-1 recompile bug)")
+        if not self.trace_counts:
+            raise InvariantViolation("harness ran nothing: no traces seen")
+        return {
+            "traces": dict(sorted(self.trace_counts.items())),
+            "compiles": sum(self.trace_counts.values()),
+            "fetches": self.fetches,
+            "steps": self.steps_checked,
+        }
+
+
+def _drive(arch_name: str, decode_steps: int = 4) -> dict:
+    """One deterministic serve script: two prompts sharing a bucket, a
+    decode burst, then a third request reusing the freed capacity — the
+    same bucket and decode keys must serve all of it with one trace each."""
+    from repro.configs import get_config
+    from repro.models import init_params
+
+    arch = get_config(arch_name).reduced()
+    params = init_params(jax.random.PRNGKey(0), arch)
+    eng = InstrumentedEngine(
+        arch, params, ServeConfig(batch_slots=2, max_ctx=64))
+    eng.add_request([3, 1, 4, 1, 5])         # bucket 8
+    eng.add_request([2, 7])                  # same bucket 8: no new trace
+    for _ in range(decode_steps):
+        eng.step()
+    report = eng.check()
+    n_prefill = sum(1 for k in eng.trace_counts if k.startswith("prefill"))
+    n_decode = sum(1 for k in eng.trace_counts if k.startswith("decode"))
+    if n_prefill != 1 or n_decode != 1:
+        raise InvariantViolation(
+            f"{arch_name}: expected 1 prefill + 1 decode executable, got "
+            f"{dict(eng.trace_counts)}")
+    # prefill fetches: one first-token selection per add_request
+    if eng.fetches != 2 + eng.steps_checked:
+        raise InvariantViolation(
+            f"{arch_name}: {eng.fetches} fetches for 2 prefills + "
+            f"{eng.steps_checked} steps (expected "
+            f"{2 + eng.steps_checked})")
+    return report
+
+
+def run_invariants(configs=INVARIANT_CONFIGS) -> dict:
+    """Run the invariant script over ``configs``; returns the JSON-able
+    counter report. Raises ``InvariantViolation`` on any breach."""
+    out: Dict[str, dict] = {}
+    failures: List[str] = []
+    for name in configs:
+        try:
+            out[name] = _drive(name)
+        except InvariantViolation as e:   # keep auditing the rest
+            out[name] = {"error": str(e)}
+            failures.append(name)
+    return {"configs": out, "violations": len(failures),
+            "failed": failures}

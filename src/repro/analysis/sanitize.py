@@ -1,0 +1,108 @@
+"""Numerics sanitizer sink for the GR-MAC kernel backends.
+
+``REPRO_SANITIZE=1`` (read per call in ``kernels.dispatch._run_plan``)
+makes the xla/tiled/ref backends stage three in-graph checks around the
+pre-ADC compute-line voltage of every block:
+
+``nonfinite``
+    any NaN/Inf in the voltage ``v`` entering ``adc_quantize`` — the
+    canonical symptom of a zero/denormal denominator or an upstream blowup
+    that would otherwise surface as downstream loss corruption;
+``adc_overflow``
+    ``|v| > 1`` (beyond float slack): the local-normalization contract
+    guarantees the compute line stays inside the ADC full-scale range, so
+    an overflow means the gain-ranging path did *not* cover the operand
+    distribution it claimed (the AFPR-CIM failure mode);
+``gain_range``
+    the per-block exponent span ``max(E) - min(E)`` (row granularity;
+    ``E(x)+E(w)`` per column for unit) exceeding
+    ``core.dse.GAIN_RANGE_LIMIT_BITS`` — the C-2C coupling-ladder depth the
+    DSE treats as a hard feasibility wall. The static mirror of this check
+    is ``CimDesign.gain_range_bits``; this one sees the *actual* operands,
+    so formats that are statically feasible but driven with out-of-family
+    data still get caught.
+
+Checks report through ``jax.debug.callback`` into the module-level
+``VIOLATIONS`` list (and a stderr line), so they work inside ``jit`` and
+name the offending site via the ``tag`` threaded down from
+``ops.cim_matmul``. When the flag is unset the backends receive
+``sanitize=False`` and stage **zero** extra primitives — the checks are
+structurally absent from the jaxpr, not merely disabled.
+
+Usage::
+
+    REPRO_SANITIZE=1 python ...            # or monkeypatch.setenv in tests
+    from repro.analysis import sanitize
+    sanitize.clear()
+    ... run model / kernels ...
+    assert not sanitize.VIOLATIONS, sanitize.VIOLATIONS
+"""
+from __future__ import annotations
+
+import os
+import sys
+from typing import List
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.dse import GAIN_RANGE_LIMIT_BITS
+
+__all__ = [
+    "ENV_VAR",
+    "OVERFLOW_TOL",
+    "VIOLATIONS",
+    "enabled",
+    "clear",
+    "check_values",
+    "check_gain_span",
+]
+
+ENV_VAR = "REPRO_SANITIZE"
+
+# |v| may legitimately graze 1.0 (full-scale inputs) and float renorm can
+# overshoot by a few ulp; anything past this slack is a real range escape.
+OVERFLOW_TOL = 1.0 + 1e-5
+
+# Violation records: {"kind", "tag", "count", "worst"} dicts, appended in
+# execution order. Host-side state — clear() between runs.
+VIOLATIONS: List[dict] = []
+
+
+def enabled() -> bool:
+    """Whether ``REPRO_SANITIZE`` currently requests instrumentation."""
+    return os.environ.get(ENV_VAR, "0") not in ("", "0")
+
+
+def clear() -> None:
+    VIOLATIONS.clear()
+
+
+def _record(kind: str, tag: str, count, worst) -> None:
+    count = int(count)
+    if not count:
+        return
+    rec = {"kind": kind, "tag": str(tag) or "<untagged>",
+           "count": count, "worst": float(worst)}
+    VIOLATIONS.append(rec)
+    print(f"[repro.sanitize] {rec['kind']} at {rec['tag']}: "
+          f"count={rec['count']} worst={rec['worst']:g}", file=sys.stderr)
+
+
+def check_values(tag: str, v: jax.Array) -> None:
+    """Stage nonfinite + pre-ADC overflow checks on compute-line ``v``."""
+    finite = jnp.isfinite(v)
+    nonfin = jnp.size(v) - jnp.sum(finite)
+    jax.debug.callback(_record, "nonfinite", tag, nonfin, jnp.inf)
+    mag = jnp.abs(jnp.where(finite, v, 0.0))
+    worst = jnp.max(mag) if v.size else jnp.float32(0.0)
+    over = jnp.sum(mag > OVERFLOW_TOL)
+    jax.debug.callback(_record, "adc_overflow", tag, over, worst)
+
+
+def check_gain_span(tag: str, span_bits: jax.Array,
+                    limit: int = GAIN_RANGE_LIMIT_BITS) -> None:
+    """Stage the gain-range-limit check on per-block exponent spans."""
+    worst = jnp.max(span_bits) if span_bits.size else jnp.int32(0)
+    count = jnp.sum(span_bits > limit)
+    jax.debug.callback(_record, "gain_range", tag, count, worst)

@@ -11,7 +11,7 @@ SSM blocks are self-contained (no separate FFN), matching Mamba2.
 from __future__ import annotations
 
 import dataclasses
-from typing import Optional, Tuple
+from typing import Tuple
 
 from repro.core.cim_config import CIMConfig
 

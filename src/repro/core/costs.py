@@ -74,6 +74,7 @@ __all__ = [
     "CostLedger",
     "recording",
     "record_matmul",
+    "phase_trace_spec",
     "trace_decode",
     "trace_prefill",
     "trace_train",
@@ -216,18 +217,59 @@ def _token_struct(arch, batch: int, seq: int):
     return jax.ShapeDtypeStruct((batch, seq, arch.d_model), jnp.float32)
 
 
+def phase_trace_spec(arch, phase: str, *, batch: int = 1,
+                     ctx: Optional[int] = None, bucket: int = 128,
+                     seq_len: Optional[int] = None) -> tuple:
+    """The exact (callable, abstract args) pair a phase trace runs.
+
+    Single source of the traced functions shared by the ledger builders
+    below and by the jaxpr ledger audit (``repro.analysis.jaxpr_audit``):
+    the audit must walk the *same* closed jaxpr whose Python trace filled
+    the ``CostLedger``, or the completeness proof would be about a
+    different computation. ``arch`` is normalized through ``_trace_arch``
+    (scan_layers/remat off) exactly like the ledger traces.
+    """
+    arch = _trace_arch(arch)
+    if phase == "decode":
+        from repro.models import decode_step
+        params = _abstract_params(arch)
+        cache = _abstract_cache(arch, batch, ctx or 128)
+        idx = jax.ShapeDtypeStruct((batch,), jnp.int32)
+        fn = lambda p, t, c, i: decode_step(p, t, arch, c, i)  # noqa: E731
+        return fn, (params, _token_struct(arch, batch, 1), cache, idx)
+    if phase == "prefill":
+        from repro.models import prefill_step
+        ctx = ctx or max(2 * bucket, 128)
+        params = _abstract_params(arch)
+        cache = _abstract_cache(arch, batch, ctx)
+        idx = jax.ShapeDtypeStruct((batch,), jnp.int32)
+        lens = jax.ShapeDtypeStruct((batch,), jnp.int32)
+        fn = lambda p, t, c, i, l: prefill_step(p, t, arch, c, i, l)  # noqa: E731
+        return fn, (params, _token_struct(arch, batch, bucket), cache,
+                    idx, lens)
+    if phase == "train":
+        from repro.models import train_loss
+        if seq_len is None:
+            seq_len = default_train_seq(arch)
+        labels = jax.ShapeDtypeStruct((batch, seq_len), jnp.int32)
+        params = _abstract_params(arch)
+
+        def step(p, inputs, lbl):
+            (total, _), grads = jax.value_and_grad(
+                lambda pp: train_loss(pp, {"inputs": inputs, "labels": lbl},
+                                      arch), has_aux=True)(p)
+            return total, grads
+
+        return step, (params, _token_struct(arch, batch, seq_len), labels)
+    raise ValueError(f"unknown phase {phase!r}")
+
+
 def trace_decode(arch, batch: int = 1, ctx: int = 128) -> CostLedger:
     """Ledger of ONE decode step over ``batch`` lanes (→ ``batch`` tokens)."""
-    from repro.models import decode_step
-    arch = _trace_arch(arch)
-    params = _abstract_params(arch)
-    cache = _abstract_cache(arch, batch, ctx)
-    idx = jax.ShapeDtypeStruct((batch,), jnp.int32)
+    fn, args = phase_trace_spec(arch, "decode", batch=batch, ctx=ctx)
     ledger = CostLedger()
     with recording(ledger):
-        jax.eval_shape(
-            lambda p, t, c, i: decode_step(p, t, arch, c, i),
-            params, _token_struct(arch, batch, 1), cache, idx)
+        jax.eval_shape(fn, *args)
     return ledger
 
 
@@ -235,18 +277,11 @@ def trace_prefill(arch, bucket: int = 128, batch: int = 1,
                   ctx: Optional[int] = None) -> CostLedger:
     """Ledger of one bucketed prefill dispatch of ``bucket`` tokens per
     lane (→ ``batch * bucket`` tokens)."""
-    from repro.models import prefill_step
-    arch = _trace_arch(arch)
-    ctx = ctx or max(2 * bucket, 128)
-    params = _abstract_params(arch)
-    cache = _abstract_cache(arch, batch, ctx)
-    idx = jax.ShapeDtypeStruct((batch,), jnp.int32)
-    lens = jax.ShapeDtypeStruct((batch,), jnp.int32)
+    fn, args = phase_trace_spec(arch, "prefill", batch=batch, bucket=bucket,
+                                ctx=ctx)
     ledger = CostLedger()
     with recording(ledger):
-        jax.eval_shape(
-            lambda p, t, c, i, l: prefill_step(p, t, arch, c, i, l),
-            params, _token_struct(arch, batch, bucket), cache, idx, lens)
+        jax.eval_shape(fn, *args)
     return ledger
 
 
@@ -264,23 +299,10 @@ def trace_train(arch, batch: int = 1,
     """Ledger of one train-step *forward* (value_and_grad traced; the STE
     backward is digital, see module docstring) over ``batch × seq_len``
     tokens."""
-    from repro.models import train_loss
-    arch = _trace_arch(arch)
-    if seq_len is None:
-        seq_len = default_train_seq(arch)
-    labels = jax.ShapeDtypeStruct((batch, seq_len), jnp.int32)
-    params = _abstract_params(arch)
+    fn, args = phase_trace_spec(arch, "train", batch=batch, seq_len=seq_len)
     ledger = CostLedger()
-
-    def step(p, inputs, lbl):
-        (total, _), grads = jax.value_and_grad(
-            lambda pp: train_loss(pp, {"inputs": inputs, "labels": lbl},
-                                  arch), has_aux=True)(p)
-        return total, grads
-
     with recording(ledger):
-        jax.eval_shape(step, params,
-                       _token_struct(arch, batch, seq_len), labels)
+        jax.eval_shape(fn, *args)
     return ledger
 
 

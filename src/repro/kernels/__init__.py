@@ -42,6 +42,32 @@ stacks (``tokens × top_k`` routed rows, not the fixed-capacity dispatch
 buffer — recorded explicitly in ``models.moe``) and the LM head (true
 ``vocab_size``, not the 256-padded matmul width, via ``logical_n=``).
 
+Machine-checked invariants
+--------------------------
+The accounting contract above is proven, not trusted, by the static
+analysis lane (``repro.analysis``, CI ``audit`` job):
+
+1. **Ledger completeness** — every ``cim_matmul`` call wraps its
+   realizing contraction in ``jax.named_scope`` markers
+   (``ops.site_marker``: ``cim_<site>_m<M>_k<K>_n<N>`` around the call,
+   ``cim_values`` on the values contraction, ``cim_gains`` on the unit
+   denominator), and model-level digital contractions declare themselves
+   (``dig_attn`` / ``dig_ssm_ssd`` / ``dig_ste_bwd``). The jaxpr audit
+   walks the traced prefill/decode/train programs and fails on any
+   ``dot_general``/``conv`` carrying none of these, and on any marker
+   whose traced count disagrees with the CostLedger entry. When adding a
+   contraction, either route it through ``cim_matmul`` or wrap it in a
+   ``dig_*`` scope — an unlabeled one fails CI with its source location.
+2. **Numerics sanitizer** — ``REPRO_SANITIZE=1`` (read per call in
+   ``dispatch._run_plan``) makes the xla/tiled/ref backends stage
+   in-graph NaN/Inf, pre-ADC overflow (|v| > 1), and gain-range-limit
+   checks via ``jax.debug.callback`` into
+   ``repro.analysis.sanitize.VIOLATIONS``; unset, the checks are
+   structurally absent (zero extra jaxpr primitives, bit-identical
+   outputs — asserted by tests/test_sanitize.py). Pallas backends are
+   not instrumented (the kernel body is opaque to ``debug.callback``);
+   cross-backend 0-ulp equality covers them indirectly.
+
 Backend selection
 -----------------
 ``CIMConfig.backend`` (or a ``backend=`` call override) names a backend or
@@ -66,6 +92,10 @@ Environment knobs
                              other process — reuse it for free.
 ``REPRO_GRMAC_PLAN_CACHE``   path of the persisted plan JSON (default
                              ``~/.cache/repro/grmac_plans.json``).
+``REPRO_SANITIZE=1``         stage the in-graph numerics sanitizer on the
+                             xla/tiled/ref backends (see "Machine-checked
+                             invariants" above); off by default and
+                             structurally free when off.
 ``REPRO_GRMAC_BF16_VALUES=1``  run the values einsums of the xla/tiled
                              backends with bf16 operands + f32 accumulator
                              when the formats make every product exact

@@ -97,6 +97,15 @@ _ENV_VAR = "REPRO_GRMAC_BACKEND"
 # kernels/xla.py for the accumulation-order caveat). Read per call so tests
 # can monkeypatch the environment.
 _BF16_ENV = "REPRO_GRMAC_BF16_VALUES"
+# Opt-in numerics sanitizer (repro.analysis.sanitize): instruments the
+# xla/tiled/ref backends with in-graph NaN/Inf, pre-ADC overflow and
+# gain-range-limit checks via jax.debug.callback. Read per call (like the
+# bf16 flag) so tests can monkeypatch the environment; when unset the
+# backends receive sanitize=False / tag="" and stage *zero* extra
+# primitives (bit-identical outputs, same jit cache keys as before).
+# The Pallas backends are not instrumented (checks cannot run inside a
+# pallas_call); sanitize runs are expected on xla/tiled/ref.
+_SAN_ENV = "REPRO_SANITIZE"
 # Opt-in micro-autotune (measured-once-then-cached planning).
 _AUTOTUNE_ENV = "REPRO_GRMAC_AUTOTUNE"
 # Override for the persisted plan-cache location.
@@ -240,7 +249,7 @@ def _autotune_candidates(m, k, n, n_r):
     return cands
 
 
-def _run_plan(x, wq, plan: Plan, kwargs) -> jax.Array:
+def _run_plan(x, wq, plan: Plan, kwargs, tag: str = "") -> jax.Array:
     b = plan.backend
     if b in ("pallas", "pallas_interpret"):
         n_r = kwargs["n_r"]
@@ -256,15 +265,20 @@ def _run_plan(x, wq, plan: Plan, kwargs) -> jax.Array:
         return out[:m, :n]
 
     bf16 = os.environ.get(_BF16_ENV, "0") not in ("", "0")
+    san = os.environ.get(_SAN_ENV, "0") not in ("", "0")
+    # tag="" when the sanitizer is off: the site label is only consumed by
+    # sanitize reports, and keeping it constant avoids one jit cache entry
+    # per call site in the normal (uninstrumented) regime.
+    san_kw = dict(sanitize=san, tag=(tag if san else ""))
     xp = pad_to_multiple(x, 1, kwargs["n_r"])
     wp = pad_to_multiple(wq, 0, kwargs["n_r"])
     if b == "tiled":
         return grmac_matmul_tiled(xp, wp, tile_m=plan.tile_m,
                                   tile_n=plan.tile_n, bf16_values=bf16,
-                                  **kwargs)
+                                  **san_kw, **kwargs)
     if b == "xla":
-        return grmac_matmul_xla(xp, wp, bf16_values=bf16, **kwargs)
-    return grmac_matmul_ref(xp, wp, **kwargs)
+        return grmac_matmul_xla(xp, wp, bf16_values=bf16, **san_kw, **kwargs)
+    return grmac_matmul_ref(xp, wp, **san_kw, **kwargs)
 
 
 def _probe(key, m, k, n, granularity, fmt_x, fmt_w, n_r, enob) -> Plan:
@@ -361,12 +375,15 @@ def grmac_matmul(
     backend: Optional[str] = None,
     tile_m: Optional[int] = None,
     tile_n: Optional[int] = None,
+    tag: str = "",
 ) -> jax.Array:
     """(M, K) @ (K, N) GR-MAC matmul via the planned backend.
 
     ``x`` pre-scaled to [-1, 1]; ``wq`` already on the weight format grid.
     Arbitrary M/N/K (padding handled here); float32 output. ``tile_m`` /
     ``tile_n`` override the plan's tile sizes (``tiled``/``pallas`` only).
+    ``tag`` names the call site in ``REPRO_SANITIZE=1`` violation reports
+    (metadata only; never changes numerics or planning).
     """
     m, k = x.shape
     n = wq.shape[1]
@@ -379,4 +396,4 @@ def grmac_matmul(
             tile_n=plan.tile_n if tile_n is None else tile_n)
     kwargs = dict(fmt_x=fmt_x, fmt_w=fmt_w, n_r=n_r, enob=enob,
                   granularity=granularity)
-    return _run_plan(x, wq, plan, kwargs)
+    return _run_plan(x, wq, plan, kwargs, tag=tag)

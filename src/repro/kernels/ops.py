@@ -36,6 +36,19 @@ matmul itself always runs at the physical shapes.
 
 All GR-MAC backends implement the same contract and are cross-validated in
 tests/test_kernels.py.
+
+Audit markers
+-------------
+Every call is wrapped in a ``jax.named_scope`` marker
+``cim_<site>_m<M>_k<K>_n<N>`` carrying the *ledger* contract (logical N for
+the LM head), and the contraction that realizes it carries a nested
+``cim_values`` scope (``cim_gains`` for the unit-normalization denominator,
+``dig_ste_bwd`` for the digital STE backward). The scopes are metadata-only
+(they change no jaxpr primitive and no numerics); the jaxpr ledger audit
+(``repro.analysis.jaxpr_audit``) walks traced model functions and proves
+every ``dot_general`` is attributable to one of these markers — or to an
+explicitly declared digital ``dig_*`` scope — with call counts matching the
+``CostLedger`` exactly.
 """
 from __future__ import annotations
 
@@ -52,14 +65,22 @@ from repro.core.formats import IntFormat, quantize, quantize_any
 
 from .dispatch import grmac_matmul, resolve_backend
 
-__all__ = ["cim_matmul"]
+__all__ = ["cim_matmul", "site_marker"]
 
 _EPS = 1e-12
 
 
-@functools.partial(jax.custom_vjp, nondiff_argnums=(2, 3))
-def _cim_matmul_2d(x, w, cfg: CIMConfig, backend: str):
-    """(M, K) @ (K, N) with CIM numerics and STE gradients."""
+def site_marker(site: Optional[str], m: int, k: int, n: int) -> str:
+    """The audit marker naming one ledger contract: parsed back by
+    ``repro.analysis.jaxpr_audit`` (site names contain underscores, so the
+    ``_m<digits>`` suffix anchors the parse)."""
+    return f"cim_{site or 'unsited'}_m{m}_k{k}_n{n}"
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(2, 3, 4))
+def _cim_matmul_2d(x, w, cfg: CIMConfig, backend: str, site: str):
+    """(M, K) @ (K, N) with CIM numerics and STE gradients. ``site`` is
+    metadata only (sanitizer context tag); it never changes numerics."""
     dtype = x.dtype
     x32 = x.astype(jnp.float32)
     w32 = w.astype(jnp.float32)
@@ -70,7 +91,8 @@ def _cim_matmul_2d(x, w, cfg: CIMConfig, backend: str):
     if cfg.mode == "fakequant":
         # fmt_x may be an IntFormat (the DSE sweeps the INT ladder and
         # per-site overrides can carry its choices); fmt_w is always FP
-        out = quantize_any(xn, cfg.fmt_x) @ quantize(wn, cfg.fmt_w)
+        with jax.named_scope("cim_values"):
+            out = quantize_any(xn, cfg.fmt_x) @ quantize(wn, cfg.fmt_w)
     elif cfg.mode == "grmac":
         if isinstance(cfg.fmt_x, IntFormat):
             raise NotImplementedError(
@@ -90,22 +112,27 @@ def _cim_matmul_2d(x, w, cfg: CIMConfig, backend: str):
             backend=backend,
             tile_m=cfg.tile_m,
             tile_n=cfg.tile_n,
+            tag=site,
         )
     else:  # off
-        out = xn @ wn
+        with jax.named_scope("cim_values"):
+            out = xn @ wn
     return (out * (sx * sw)).astype(dtype)
 
 
-def _fwd(x, w, cfg, backend):
-    out = _cim_matmul_2d(x, w, cfg, backend)
+def _fwd(x, w, cfg, backend, site):
+    out = _cim_matmul_2d(x, w, cfg, backend, site)
     return out, (x, w)
 
 
-def _bwd(cfg, backend, res, g):
+def _bwd(cfg, backend, site, res, g):
     x, w = res
-    # Straight-through: gradients flow as if the matmul were exact.
-    gx = (g @ w.T.astype(g.dtype)).astype(x.dtype)
-    gw = (x.T.astype(g.dtype) @ g).astype(w.dtype)
+    # Straight-through: gradients flow as if the matmul were exact. The
+    # dig_ste_bwd scope declares these contractions digital-by-design to
+    # the jaxpr ledger audit (the backward never hits the analog array).
+    with jax.named_scope("dig_ste_bwd"):
+        gx = (g @ w.T.astype(g.dtype)).astype(x.dtype)
+        gw = (x.T.astype(g.dtype) @ g).astype(w.dtype)
     return gx, gw
 
 
@@ -135,10 +162,13 @@ def cim_matmul(
     lead = x.shape[:-1]
     k = x.shape[-1]
     n = w.shape[-1]
-    costs.record_matmul(site, math.prod(lead), k,
-                        n if logical_n is None else logical_n, eff)
+    m = math.prod(lead)
+    ledger_n = n if logical_n is None else logical_n
+    costs.record_matmul(site, m, k, ledger_n, eff)
+    marker = site_marker(site, m, k, ledger_n)
     if eff is None or not eff.enabled:
-        return x @ w
+        with jax.named_scope(marker), jax.named_scope("cim_values"):
+            return x @ w
     if backend is None:
         if use_kernel is not None:
             backend = "pallas" if use_kernel else "xla"
@@ -147,5 +177,6 @@ def cim_matmul(
     # resolve outside the custom_vjp so the nondiff arg is a concrete,
     # hashable backend name (stable jit cache key)
     backend = resolve_backend(backend)
-    out = _cim_matmul_2d(x.reshape(-1, k), w, eff, backend)
+    with jax.named_scope(marker):
+        out = _cim_matmul_2d(x.reshape(-1, k), w, eff, backend, site or "")
     return out.reshape(*lead, n)

@@ -24,6 +24,7 @@ grid.  All math in float32.
 """
 from __future__ import annotations
 
+import jax
 import jax.numpy as jnp
 
 from repro.core.formats import FPFormat, decompose, pow2i, quantize
@@ -47,23 +48,35 @@ def grmac_matmul_ref(
     n_r: int = 32,
     enob: float = 8.0,
     granularity: str = "row",
+    sanitize: bool = False,
+    tag: str = "",
 ) -> jnp.ndarray:
-    """Reference GR-MAC matmul: (M, K) @ (K, N) -> (M, N), float32."""
+    """Reference GR-MAC matmul: (M, K) @ (K, N) -> (M, N), float32.
+
+    ``sanitize``/``tag`` stage the ``repro.analysis.sanitize`` checks on the
+    pre-ADC voltage and exponent spans (absent when ``sanitize=False``).
+    """
     x = x.astype(jnp.float32)
     wq = wq.astype(jnp.float32)
     m, k = x.shape
     k2, n = wq.shape
     assert k == k2
+    if sanitize:
+        from repro.analysis import sanitize as _san
 
     xq = quantize(x, fmt_x)
     xb = _block(xq, n_r)                     # (M, B, n_r)
     wb = wq.reshape(k // n_r, n_r, n)        # (B, n_r, N)
 
     # values matmul per block: (M, B, N)
-    num = jnp.einsum("mbk,bkn->mbn", xb, wb, preferred_element_type=jnp.float32)
+    with jax.named_scope("cim_values"):
+        num = jnp.einsum("mbk,bkn->mbn", xb, wb,
+                         preferred_element_type=jnp.float32)
 
     if granularity == "conv":
         v = num / n_r
+        if sanitize:
+            _san.check_values(tag, v)
         z = adc_quantize(v, enob) * n_r
         return jnp.sum(z, axis=1)
 
@@ -74,15 +87,28 @@ def grmac_matmul_ref(
     if granularity == "row":
         den = jnp.sum(gxb, axis=-1)          # (M, B)
         v = num * 2.0**fmt_x.e_max / den[:, :, None]
+        if sanitize:
+            _san.check_values(tag, v)
+            exb = _block(ex, n_r)
+            _san.check_gain_span(
+                tag, jnp.max(exb, axis=-1) - jnp.min(exb, axis=-1))
         z = adc_quantize(v, enob) * (den[:, :, None] * 2.0**-fmt_x.e_max)
         return jnp.sum(z, axis=1)
 
     if granularity == "unit":
         _, _, ew = decompose(wq, fmt_w)
         gw = pow2i(ew).reshape(k // n_r, n_r, n)
-        den = jnp.einsum("mbk,bkn->mbn", gxb, gw, preferred_element_type=jnp.float32)
+        with jax.named_scope("cim_gains"):
+            den = jnp.einsum("mbk,bkn->mbn", gxb, gw,
+                             preferred_element_type=jnp.float32)
         scale = 2.0 ** (fmt_x.e_max + fmt_w.e_max)
         v = num * scale / den
+        if sanitize:
+            _san.check_values(tag, v)
+            comb = (_block(ex, n_r)[:, :, :, None]
+                    + ew.reshape(k // n_r, n_r, n)[None])
+            _san.check_gain_span(
+                tag, jnp.max(comb, axis=2) - jnp.min(comb, axis=2))
         z = adc_quantize(v, enob) * (den / scale)
         return jnp.sum(z, axis=1)
 

@@ -84,7 +84,7 @@ def pad_to_multiple(x: jax.Array, axis: int, mult: int) -> jax.Array:
 @functools.partial(
     jax.jit,
     static_argnames=("fmt_x", "fmt_w", "n_r", "enob", "granularity",
-                     "tile_m", "tile_n", "bf16_values"),
+                     "tile_m", "tile_n", "bf16_values", "sanitize", "tag"),
 )
 def grmac_matmul_tiled(
     x: jax.Array,
@@ -98,6 +98,8 @@ def grmac_matmul_tiled(
     tile_m: int = 0,
     tile_n: int = 0,
     bf16_values: bool = False,
+    sanitize: bool = False,
+    tag: str = "",
 ) -> jax.Array:
     """(M, K) @ (K, N) GR-MAC matmul, fused per M(xN)-tile; float32 out.
 
@@ -106,6 +108,8 @@ def grmac_matmul_tiled(
     ``tile_n`` need not divide M / N (zero-padded rows/cols are computed and
     sliced away; padding is exact — see dispatch.py's padding contract).
     ``tile_m=0`` picks ``default_tile_m``; ``tile_n=0`` disables N-tiling.
+    ``sanitize``/``tag`` stage the ``repro.analysis.sanitize`` checks per
+    tile (structurally absent when ``sanitize=False``, the default).
     """
     if granularity not in ("conv", "row", "unit"):
         raise ValueError(f"unknown granularity {granularity!r}")
@@ -118,6 +122,8 @@ def grmac_matmul_tiled(
     if tile_m <= 0:
         tile_m = default_tile_m(k, n, n_r, tile_n)
     tn = tile_n if 0 < tile_n < n else 0
+    if sanitize:
+        from repro.analysis import sanitize as _san
 
     op_dtype = (jnp.bfloat16 if bf16_values and bf16_products_exact(
         fmt_x, fmt_w) else jnp.float32)
@@ -127,23 +133,45 @@ def grmac_matmul_tiled(
                           bb.astype(op_dtype),
                           preferred_element_type=jnp.float32)
 
+    def _exponents(g):
+        # gains are exact powers of two: frexp(2^e) = (0.5, e + 1)
+        return jnp.frexp(g)[1] - 1
+
     def fused_tile(xb_t, gxb_t, wb_t, gwb_t):
         """One resident slab: GEMM -> den -> ADC -> renorm -> block-sum.
 
         Shapes: xb_t/gxb_t (tile_m, B, n_r); wb_t/gwb_t (B, n_r, cols).
         Per-element math is ref.py's, verbatim — the 0-ulp contract.
         """
-        num = block_einsum(xb_t, wb_t)
+        with jax.named_scope("cim_values"):
+            num = block_einsum(xb_t, wb_t)
         if granularity == "conv":
-            z = adc_quantize(num * (1.0 / n_r), enob) * float(n_r)
+            v = num * (1.0 / n_r)
+            if sanitize:
+                _san.check_values(tag, v)
+            z = adc_quantize(v, enob) * float(n_r)
         elif granularity == "row":
             den = jnp.sum(gxb_t, axis=-1)[:, :, None]        # (tile_m, B, 1)
             scale = 2.0**fmt_x.e_max
-            z = adc_quantize(num * scale / den, enob) * (den * (1.0 / scale))
+            v = num * scale / den
+            if sanitize:
+                _san.check_values(tag, v)
+                ex_t = _exponents(gxb_t)
+                _san.check_gain_span(
+                    tag, jnp.max(ex_t, axis=-1) - jnp.min(ex_t, axis=-1))
+            z = adc_quantize(v, enob) * (den * (1.0 / scale))
         else:  # unit
-            den = block_einsum(gxb_t, gwb_t)
+            with jax.named_scope("cim_gains"):
+                den = block_einsum(gxb_t, gwb_t)
             scale = 2.0 ** (fmt_x.e_max + fmt_w.e_max)
-            z = adc_quantize(num * scale / den, enob) * (den * (1.0 / scale))
+            v = num * scale / den
+            if sanitize:
+                _san.check_values(tag, v)
+                comb = (_exponents(gxb_t)[:, :, :, None]
+                        + _exponents(gwb_t)[None])
+                _san.check_gain_span(
+                    tag, jnp.max(comb, axis=2) - jnp.min(comb, axis=2))
+            z = adc_quantize(v, enob) * (den * (1.0 / scale))
         return jnp.sum(z, axis=1)                            # (tile_m, cols)
 
     # Weight-side operands are laid out once, outside the scan.

@@ -70,7 +70,7 @@ def bf16_products_exact(fmt_x, fmt_w) -> bool:
 @functools.partial(
     jax.jit,
     static_argnames=("fmt_x", "fmt_w", "n_r", "enob", "granularity",
-                     "bf16_values"),
+                     "bf16_values", "sanitize", "tag"),
 )
 def grmac_matmul_xla(
     x: jax.Array,
@@ -82,6 +82,8 @@ def grmac_matmul_xla(
     enob: float = 8.0,
     granularity: str = "row",
     bf16_values: bool = False,
+    sanitize: bool = False,
+    tag: str = "",
 ) -> jax.Array:
     """(M, K) @ (K, N) GR-MAC matmul, fully vectorized; float32 out.
 
@@ -89,6 +91,9 @@ def grmac_matmul_xla(
     ``K`` must be a multiple of ``n_r`` (dispatch.py pads).
     ``bf16_values`` runs the block einsums with bf16 operands and an f32
     accumulator when the formats make the products exact (no-op otherwise).
+    ``sanitize`` stages the ``repro.analysis.sanitize`` checks on the
+    pre-ADC voltage / exponent spans, reported under ``tag``; when False
+    (the default) the staged graph is exactly the uninstrumented one.
     """
     x = x.astype(jnp.float32)
     wq = wq.astype(jnp.float32)
@@ -96,6 +101,8 @@ def grmac_matmul_xla(
     k2, n = wq.shape
     assert k == k2 and k % n_r == 0
     b = k // n_r
+    if sanitize:
+        from repro.analysis import sanitize as _san
 
     op_dtype = (jnp.bfloat16 if bf16_values and bf16_products_exact(
         fmt_x, fmt_w) else jnp.float32)
@@ -110,8 +117,12 @@ def grmac_matmul_xla(
     wb = wq.reshape(b, n_r, n)
 
     if granularity == "conv":
-        num = block_einsum(xb, wb)
-        z = adc_quantize(num * (1.0 / n_r), enob) * float(n_r)
+        with jax.named_scope("cim_values"):
+            num = block_einsum(xb, wb)
+        v = num * (1.0 / n_r)
+        if sanitize:
+            _san.check_values(tag, v)
+        z = adc_quantize(v, enob) * float(n_r)
         return jnp.sum(z, axis=1)
 
     # input gains 2^{E(xq)} — exponent of the *quantized* value (rounding
@@ -120,20 +131,37 @@ def grmac_matmul_xla(
     gxb = pow2i(ex).reshape(m, b, n_r)
 
     if granularity == "row":
-        num = block_einsum(xb, wb)
+        with jax.named_scope("cim_values"):
+            num = block_einsum(xb, wb)
         den = jnp.sum(gxb, axis=-1)[:, :, None]          # (M, B, 1)
         scale = 2.0**fmt_x.e_max
-        z = adc_quantize(num * scale / den, enob) * (den * (1.0 / scale))
+        v = num * scale / den
+        if sanitize:
+            _san.check_values(tag, v)
+            exb = ex.reshape(m, b, n_r)
+            _san.check_gain_span(
+                tag, jnp.max(exb, axis=-1) - jnp.min(exb, axis=-1))
+        z = adc_quantize(v, enob) * (den * (1.0 / scale))
         return jnp.sum(z, axis=1)
 
     if granularity == "unit":
         _, _, ew = decompose(wq, fmt_w)
         gwb = pow2i(ew).reshape(b, n_r, n)
-        num = block_einsum(xb, wb)
+        with jax.named_scope("cim_values"):
+            num = block_einsum(xb, wb)
         # gains are powers of two: their bf16 products are exact too
-        den = block_einsum(gxb, gwb)
+        with jax.named_scope("cim_gains"):
+            den = block_einsum(gxb, gwb)
         scale = 2.0 ** (fmt_x.e_max + fmt_w.e_max)
-        z = adc_quantize(num * scale / den, enob) * (den * (1.0 / scale))
+        v = num * scale / den
+        if sanitize:
+            _san.check_values(tag, v)
+            # combined exponent per unit instance: E(x_i) + E(w_i,n)
+            comb = (ex.reshape(m, b, n_r)[:, :, :, None]
+                    + ew.reshape(b, n_r, n)[None])
+            _san.check_gain_span(
+                tag, jnp.max(comb, axis=2) - jnp.min(comb, axis=2))
+        z = adc_quantize(v, enob) * (den * (1.0 / scale))
         return jnp.sum(z, axis=1)
 
     raise ValueError(f"unknown granularity {granularity!r}")

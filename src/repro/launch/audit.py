@@ -1,0 +1,12 @@
+"""Launcher glue for the static-analysis audit.
+
+Same entry point as ``python -m repro.analysis`` (kept here so every
+runnable surface of the repo lives under ``repro.launch``):
+
+    PYTHONPATH=src python -m repro.launch.audit --all-configs \
+        --out experiments/audit/audit_report.json
+"""
+from repro.analysis.cli import main
+
+if __name__ == "__main__":
+    raise SystemExit(main())

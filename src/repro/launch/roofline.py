@@ -57,7 +57,6 @@ def _shape_bytes(shape_str: str) -> int:
 def collective_bytes(hlo_text: str) -> Dict[str, float]:
     """Weighted bytes moved per device, by collective kind."""
     out: Dict[str, float] = {}
-    seen_done = set()
     for m in _COLL_RE.finditer(hlo_text):
         shape_str, kind = m.group(1), m.group(2)
         # async pairs appear as -start/-done; count each op once (the -start

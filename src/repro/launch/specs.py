@@ -11,7 +11,6 @@ Shapes (assignment):
 from __future__ import annotations
 
 import dataclasses
-from typing import Optional
 
 import jax
 import jax.numpy as jnp

@@ -8,8 +8,6 @@ Usage:
 """
 import argparse
 
-import jax
-
 from repro.configs import get_config
 from repro.data.pipeline import DataConfig, SyntheticLM
 from repro.launch.mesh import make_local_mesh, make_production_mesh

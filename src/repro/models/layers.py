@@ -102,13 +102,18 @@ def _attend_chunked(q, kk, vv, pos_q, pos_k, cfg: ArchConfig, local: bool):
     def attend(q_c, pos_c):
         c = q_c.shape[1]
         qg = q_c.reshape(b, c, kv, groups, dh)
-        scores = jnp.einsum("bskgd,btkd->bkgst", qg, kk,
-                            preferred_element_type=jnp.float32)
+        # dig_attn: score/value contractions are digital by design (the
+        # paper maps only weight-stationary projections onto CIM arrays) —
+        # the scope declares them to the jaxpr ledger audit.
+        with jax.named_scope("dig_attn"):
+            scores = jnp.einsum("bskgd,btkd->bkgst", qg, kk,
+                                preferred_element_type=jnp.float32)
         scores = scores / math.sqrt(dh)
         mask = _attn_mask(pos_c, pos_k, cfg.window, local)      # (B, C, Sk)
         scores = jnp.where(mask[:, None, None, :, :], scores, _NEG_INF)
         probs = jax.nn.softmax(scores, axis=-1).astype(q.dtype)
-        o = jnp.einsum("bkgst,btkd->bskgd", probs, vv)
+        with jax.named_scope("dig_attn"):
+            o = jnp.einsum("bkgst,btkd->bskgd", probs, vv)
         return o.reshape(b, c, h, dh)
 
     ck = cfg.attn_chunk or sq
@@ -301,8 +306,9 @@ def attention(
         vv = upd(cache["v"], v.astype(cache["v"].dtype), write_at)
         new_cache = {"k": kk, "v": vv}
         qg = q.reshape(b, 1, kv, groups, dh)
-        scores = jnp.einsum("bskgd,btkd->bkgst", qg, kk.astype(x.dtype),
-                            preferred_element_type=jnp.float32)
+        with jax.named_scope("dig_attn"):
+            scores = jnp.einsum("bskgd,btkd->bkgst", qg, kk.astype(x.dtype),
+                                preferred_element_type=jnp.float32)
         scores = scores / math.sqrt(dh)
         # positions of cache slots, per sequence
         slot = jnp.arange(s_ctx)[None, :]                           # (1,S)
@@ -314,7 +320,8 @@ def attention(
             valid = slot <= idx[:, None]                            # (B,S)
         scores = jnp.where(valid[:, None, None, None, :], scores, _NEG_INF)
         probs = jax.nn.softmax(scores, axis=-1).astype(x.dtype)
-        out = jnp.einsum("bkgst,btkd->bskgd", probs, vv.astype(x.dtype))
+        with jax.named_scope("dig_attn"):
+            out = jnp.einsum("bkgst,btkd->bskgd", probs, vv.astype(x.dtype))
 
     out = out.reshape(b, s, h * dh)
     return dense(p["wo"], out, cim, "attn_o"), new_cache

@@ -26,6 +26,7 @@ from jax.sharding import PartitionSpec as P
 from repro.compat import shard_map
 from repro.configs.base import ArchConfig
 from repro.core import costs
+from repro.kernels.ops import site_marker
 from repro.models.layers import dense, init_dense, init_mlp, mlp
 from repro.parallel.sharding import axis_divides, batch_axes, get_mesh, shard
 
@@ -163,15 +164,24 @@ def moe(p, x: jax.Array, cfg: ArchConfig,
     costs.record_matmul("moe_expert", t * k, f, d, eff)
     wi = p["experts"]["wi"].astype(x.dtype)
     wo = p["experts"]["wo"].astype(x.dtype)
-    h = jnp.einsum("ecd,edf->ecf", buf, wi)
+    # Audit markers mirror the record_matmul contracts above: the expert
+    # einsums run at buffer shapes but account (and are audited) at the
+    # logical routed-compute shapes.
+    m_in = site_marker("moe_expert", t * k, d, f)
+    m_out = site_marker("moe_expert", t * k, f, d)
+    with jax.named_scope(m_in), jax.named_scope("cim_values"):
+        h = jnp.einsum("ecd,edf->ecf", buf, wi)
     if cfg.gated_mlp:
         wg = p["experts"]["wg"].astype(x.dtype)
-        h = jax.nn.silu(jnp.einsum("ecd,edf->ecf", buf, wg)) * h
+        with jax.named_scope(m_in), jax.named_scope("cim_values"):
+            hg = jnp.einsum("ecd,edf->ecf", buf, wg)
+        h = jax.nn.silu(hg) * h
     else:
         h = jax.nn.gelu(h)
     h = shard(h, "model", "data", None) if ep else shard(
         h, None, "data", "model")
-    out_buf = jnp.einsum("ecf,efd->ecd", h, wo)
+    with jax.named_scope(m_out), jax.named_scope("cim_values"):
+        out_buf = jnp.einsum("ecf,efd->ecd", h, wo)
     out_buf = shard(out_buf, "model" if ep else None, "data", None)
 
     # --- combine ---

@@ -30,6 +30,26 @@ functions (prefill / decode / train phases) at each site's resolved design
 ``Engine.energy_per_token`` surface decode-phase pJ per generated token
 next to the serving stats. The underlying required-ENOB Monte-Carlo is
 memoized per design point (see ``core.costs.design_energy_fj``).
+
+Machine-checked invariants
+--------------------------
+Two hot-path properties are enforced by ``repro.analysis.invariants``
+(CI audit lane + tests/test_serving_invariants.py), not just documented:
+
+1. **Compile budget**: at most one compilation per (arch, sampling mode)
+   decode executable and per (arch, bucket) prefill executable, shared by
+   every Engine via the module-level ``_decode_fn``/``_prefill_fn`` lru
+   caches. A second trace of the same key means a retracing regression
+   (the PR-1 recompile bug).
+2. **One transfer per decode step**: every device→host crossing routes
+   through ``Engine._fetch`` — one ``(batch_slots,)`` int32 array per
+   ``step`` (and per prefill first-token selection). Adding a second
+   transfer to the hot path fails the harness.
+
+The seams the harness instruments are ``_decode_raw``/``_prefill_raw``
+(the unjitted step bodies), ``_compiled_decode``/``_compiled_prefill``
+(the per-engine dispatch points), and ``_fetch``; keep new hot-path code
+flowing through them.
 """
 from __future__ import annotations
 
@@ -92,6 +112,26 @@ def _merge_cache(old, new, mask):
     return out
 
 
+def _decode_raw(arch: ArchConfig, sample: bool):
+    """The unjitted fused decode-step body (forward + active-mask cache
+    merge + token selection). Exposed separately from ``_decode_fn`` so the
+    invariant harness (``repro.analysis.invariants``) can wrap it in a
+    compile counter before jitting — same function, same trace."""
+    def fn(params, toks, cache, lengths, active, key, temp):
+        logits, new_cache = decode_step(params, toks, arch, cache, lengths)
+        merged = _merge_cache(cache, new_cache, active)
+        if sample:
+            keys = jax.random.split(key, logits.shape[0])
+            nxt = jax.vmap(
+                lambda k, lg: jax.random.categorical(k, lg / temp))(
+                    keys, logits)
+        else:
+            nxt = jnp.argmax(logits, axis=-1)
+        return nxt.astype(jnp.int32), merged
+
+    return fn
+
+
 @functools.lru_cache(maxsize=64)
 def _decode_fn(arch: ArchConfig, sample: bool):
     """One compiled decode executable per (arch, sampling mode), shared by
@@ -105,19 +145,14 @@ def _decode_fn(arch: ArchConfig, sample: bool):
     (argmax, or per-lane temperature categorical when ``sample``), so
     logits and caches never cross the device boundary.
     """
-    def fn(params, toks, cache, lengths, active, key, temp):
-        logits, new_cache = decode_step(params, toks, arch, cache, lengths)
-        merged = _merge_cache(cache, new_cache, active)
-        if sample:
-            keys = jax.random.split(key, logits.shape[0])
-            nxt = jax.vmap(
-                lambda k, lg: jax.random.categorical(k, lg / temp))(
-                    keys, logits)
-        else:
-            nxt = jnp.argmax(logits, axis=-1)
-        return nxt.astype(jnp.int32), merged
+    return jax.jit(_decode_raw(arch, sample))
 
-    return jax.jit(fn)
+
+def _prefill_raw(arch: ArchConfig, bucket: int):
+    """The unjitted chunked-prefill body for one bucket length (see
+    ``_decode_raw`` for why the raw/jit split exists)."""
+    del bucket  # shapes carry the bucket; the key just partitions the cache
+    return lambda p, t, c, i, l: prefill_step(p, t, arch, c, i, l)
 
 
 @functools.lru_cache(maxsize=256)
@@ -125,7 +160,7 @@ def _prefill_fn(arch: ArchConfig, bucket: int):
     """One compiled chunked-prefill executable per (arch, bucket length),
     shared by every Engine. Buckets are powers of two (see
     ``Engine._bucket``), so the cache stays O(log max_ctx) per arch."""
-    return jax.jit(lambda p, t, c, i, l: prefill_step(p, t, arch, c, i, l))
+    return jax.jit(_prefill_raw(arch, bucket))
 
 
 @dataclasses.dataclass
@@ -176,9 +211,23 @@ class Engine:
         # slots that have hosted a request (their cache state is dirty and
         # must be zeroed before reuse)
         self._dirty = np.zeros(cfg.batch_slots, bool)
+        # slots completed outside step() (first prefill token == EOS),
+        # surfaced through the next StepResult.finished
+        self._pending_finished: List[int] = []
         # lazily-computed decode-phase energy report (None until asked)
         self._energy: Optional[dict] = None
         self.stats = {"prefill_dispatches": 0, "decode_steps": 0}
+
+    # ------------------------------------------------------- compiled fns
+    # Per-engine indirection over the shared executable caches: the single
+    # seam through which every compiled dispatch flows, so the invariant
+    # harness (repro.analysis.invariants) can interpose counters without
+    # touching the hot-path call sites.
+    def _compiled_decode(self, sample: bool):
+        return _decode_fn(self.arch, sample)
+
+    def _compiled_prefill(self, bucket: int):
+        return _prefill_fn(self.arch, bucket)
 
     @staticmethod
     def _snapshot(host_state: np.ndarray) -> jax.Array:
@@ -259,7 +308,11 @@ class Engine:
         self.tokens[slot].append(first)
         self._last_host[slot] = first
         if self._eos[slot] >= 0 and first == self._eos[slot]:
-            self.active[slot] = False  # one-token completion: free at once
+            # one-token completion: free at once, and surface it through
+            # the next StepResult.finished (the slot never joins a decode
+            # batch, so step() would otherwise never report it)
+            self.active[slot] = False
+            self._pending_finished.append(slot)
         return slot
 
     def _select_token(self, logits_dev: jax.Array, slot: int,
@@ -314,7 +367,7 @@ class Engine:
         toks[slot, :len(chunk)] = chunk
         lens = np.zeros(self.cfg.batch_slots, np.int32)
         lens[slot] = len(chunk)
-        fill = _prefill_fn(self.arch, bucket)
+        fill = self._compiled_prefill(bucket)
         logits, self.cache = fill(
             self.params, jnp.asarray(toks), self.cache,
             self._snapshot(self.lengths), jnp.asarray(lens))
@@ -332,7 +385,7 @@ class Engine:
         toks[slot, 0] = token
         mask = np.zeros(self.cfg.batch_slots, bool)
         mask[slot] = True
-        ids, self.cache = _decode_fn(self.arch, sample)(
+        ids, self.cache = self._compiled_decode(sample)(
             self.params, jnp.asarray(toks), self.cache,
             self._snapshot(self.lengths), jnp.asarray(mask),
             key if key is not None else jax.random.PRNGKey(0),
@@ -357,12 +410,15 @@ class Engine:
         generated token (ledger-derived, see ``energy_per_token``; None
         when the arch serves without the CIM path). Freed slots drop out
         of the active mask (their caches freeze inside the fused decode)
-        and are immediately claimable by ``add_request``.
+        and are immediately claimable by ``add_request``. Requests that
+        completed during ``add_request`` itself (first prefill-sampled
+        token == EOS) are reported here too, ahead of this step's frees.
         """
+        pending, self._pending_finished = self._pending_finished, []
         if not self.active.any():
-            return StepResult({}, [], self._pj_per_token)
+            return StepResult({}, pending, self._pj_per_token)
         sample = self.cfg.temperature > 0 and key is not None
-        fn = _decode_fn(self.arch, sample)
+        fn = self._compiled_decode(sample)
         ids_dev, self.cache = fn(
             self.params, self._snapshot(self._last_host[:, None]),
             self.cache, self._snapshot(self.lengths),
@@ -383,7 +439,7 @@ class Engine:
         # cache freezes in the next fused decode) and is free to reuse.
         hit_eos = (self._eos >= 0) & (self._last_host == self._eos)
         done = self.active & (hit_eos | (self.lengths >= self.cfg.max_ctx))
-        finished = [int(s) for s in np.where(done)[0]]
+        finished = pending + [int(s) for s in np.where(done)[0]]
         self.active[done] = False
         self.stats["decode_steps"] += 1
         return StepResult(out, finished, self._pj_per_token)

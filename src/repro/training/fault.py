@@ -18,8 +18,7 @@ from __future__ import annotations
 import dataclasses
 import json
 import os
-import time
-from typing import Dict, List, Optional, Tuple
+from typing import List, Optional, Tuple
 
 import jax
 import numpy as np

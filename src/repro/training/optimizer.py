@@ -8,7 +8,7 @@ optimizer state unchanged — the property that matters at 512+ ways.
 from __future__ import annotations
 
 import dataclasses
-from typing import Optional, Tuple
+from typing import Tuple
 
 import jax
 import jax.numpy as jnp

@@ -1,6 +1,4 @@
 """Unit + property tests for the core CIM library (formats, MAC, ADC, energy)."""
-import math
-
 import jax
 import jax.numpy as jnp
 import numpy as np

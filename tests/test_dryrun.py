@@ -3,14 +3,8 @@
 NOTE: needs its own process for XLA_FLAGS, so it spawns subprocesses for
 the device-count-sensitive parts; pure-logic tests run in-process.
 """
-import json
 import subprocess
 import sys
-
-import jax
-import numpy as np
-import pytest
-from jax.sharding import PartitionSpec as P
 
 from repro.launch.roofline import (
     collective_bytes,

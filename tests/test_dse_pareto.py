@@ -21,8 +21,8 @@ from repro.core.adc import required_enob, solve_required_enob, \
     narrowest_uniform
 from repro.core.cim_config import SiteDesign
 from repro.core.dse import (GAIN_RANGE_LIMIT_BITS, SiteBudget,
-                            deployment_front, explore_pareto,
-                            explore_sites, pareto_front, spec_of_format)
+                            explore_pareto, explore_sites, pareto_front,
+                            spec_of_format)
 from repro.core.formats import FP6_E3M2, FPFormat, IntFormat, parse_format
 
 # small grids keep the test sweep to a handful of Monte-Carlo solves; the

@@ -304,6 +304,25 @@ def test_cim_matmul_backend_kwarg():
     np.testing.assert_array_equal(np.asarray(a), np.asarray(d))
 
 
+@pytest.mark.parametrize("backend", BACKENDS)
+def test_grmac_with_intformat_raises_not_implemented(backend):
+    """grmac execution has no INT signal chain (the gr_int ladder is priced
+    analytically by core.dse only): every backend must refuse an IntFormat
+    input with the same actionable error through the model-facing op, not
+    trace into a wrong-numerics kernel."""
+    from repro.core.formats import IntFormat
+    x, w = _data(jax.random.PRNGKey(11), 16, 64, 8)
+    cfg = CIMConfig(mode="grmac", granularity="row", n_r=32,
+                    fmt_x=IntFormat(8))
+    with pytest.raises(NotImplementedError, match="IntFormat"):
+        cim_matmul(x, w, cfg, backend=backend)
+    # fakequant, by contrast, supports the INT ladder: same config must run
+    out = cim_matmul(x, w, CIMConfig(mode="fakequant", granularity="row",
+                                     n_r=32, fmt_x=IntFormat(8)))
+    assert out.shape == (16, 8)
+    assert bool(jnp.all(jnp.isfinite(out)))
+
+
 # ----------------------------------------- Pallas interpret-mode cross-check
 @pytest.mark.slow
 @pytest.mark.parametrize("granularity", ["conv", "row", "unit"])

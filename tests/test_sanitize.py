@@ -1,0 +1,124 @@
+"""Opt-in numerics sanitizer (``REPRO_SANITIZE=1``): the GR-MAC backends
+stage in-graph nonfinite / pre-ADC-overflow / gain-range-limit checks, and
+stage NOTHING when the flag is unset — structurally zero-cost (no extra
+jaxpr primitives, bit-identical outputs), not merely disabled."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.analysis import sanitize
+from repro.core.formats import FP4_E2M1, FP6_E3M2, FP8_E4M3, quantize
+from repro.kernels.dispatch import grmac_matmul
+
+
+def _kw(**over):
+    kw = dict(fmt_x=FP6_E3M2, fmt_w=FP4_E2M1, n_r=32, enob=8.0,
+              granularity="row", backend="xla")
+    kw.update(over)
+    return kw
+
+
+def _data(key, m, k, n, *, narrow=False):
+    """Uniform operands; ``narrow=True`` confines magnitudes to [0.5, 1)
+    (a single binade), so every gain-range span is well inside the limit
+    and the compute line stays inside ADC full scale."""
+    kx, kw_ = jax.random.split(jax.random.PRNGKey(key))
+    lo = 0.5 if narrow else -1.0
+    x = jax.random.uniform(kx, (m, k), minval=lo, maxval=1.0)
+    if narrow:
+        sgn = jnp.sign(jax.random.uniform(kw_, (m, k)) - 0.5)
+        x = sgn * x
+    w = quantize(jax.random.uniform(kw_, (k, n), minval=lo, maxval=1.0),
+                 FP4_E2M1)
+    return x, w
+
+
+@pytest.fixture
+def _clean(monkeypatch):
+    monkeypatch.delenv(sanitize.ENV_VAR, raising=False)
+    sanitize.clear()
+    yield
+    sanitize.clear()
+
+
+def test_zero_cost_when_unset(_clean, monkeypatch):
+    """No REPRO_SANITIZE: zero extra jaxpr primitives, and the output is
+    bit-identical to an explicit '0' (the two off spellings share a plan)."""
+    x, w = _data(0, 64, 64, 16)
+    jaxpr = jax.make_jaxpr(lambda a, b: grmac_matmul(a, b, **_kw()))(x, w)
+    assert "debug_callback" not in str(jaxpr)
+    out_unset = np.asarray(grmac_matmul(x, w, **_kw()))
+    monkeypatch.setenv(sanitize.ENV_VAR, "0")
+    out_zero = np.asarray(grmac_matmul(x, w, **_kw()))
+    np.testing.assert_array_equal(out_unset, out_zero)
+    assert sanitize.VIOLATIONS == []
+
+
+def test_sanitize_on_is_bit_identical_and_clean(_clean, monkeypatch):
+    """Instrumentation must never change numerics, and well-conditioned
+    (single-binade) operands must report nothing on any backend."""
+    x, w = _data(1, 64, 64, 16, narrow=True)
+    baselines = {g: np.asarray(grmac_matmul(x, w, **_kw(granularity=g)))
+                 for g in ("conv", "row", "unit")}
+    monkeypatch.setenv(sanitize.ENV_VAR, "1")
+    jaxpr = jax.make_jaxpr(
+        lambda a, b: grmac_matmul(a, b, tag="t", **_kw()))(x, w)
+    assert "debug_callback" in str(jaxpr)   # the checks really staged
+    for backend in ("xla", "tiled", "ref"):
+        for g in ("conv", "row", "unit"):
+            out = grmac_matmul(x, w, tag=f"{backend}/{g}",
+                               **_kw(granularity=g, backend=backend))
+            np.testing.assert_array_equal(np.asarray(out), baselines[g])
+    jax.effects_barrier()
+    assert sanitize.VIOLATIONS == [], sanitize.VIOLATIONS
+
+
+@pytest.mark.parametrize("backend", ["xla", "tiled", "ref"])
+def test_nan_input_is_caught(_clean, monkeypatch, backend):
+    monkeypatch.setenv(sanitize.ENV_VAR, "1")
+    x, w = _data(2, 16, 64, 8)
+    x = x.at[0, 0].set(jnp.nan)
+    out = grmac_matmul(x, w, tag=f"nan/{backend}",
+                       **_kw(backend=backend))
+    jax.block_until_ready(out)
+    jax.effects_barrier()
+    recs = [v for v in sanitize.VIOLATIONS if v["kind"] == "nonfinite"]
+    assert recs, sanitize.VIOLATIONS
+    assert recs[0]["tag"] == f"nan/{backend}"
+    assert recs[0]["count"] >= 1
+
+
+def test_gain_range_violation_is_caught(_clean, monkeypatch):
+    """FP8_E4M3 activations over full-range uniform data span more
+    exponent bits than GAIN_RANGE_LIMIT_BITS per row block: statically the
+    format is on the feasibility wall, and the sanitizer sees the actual
+    operands cross it."""
+    monkeypatch.setenv(sanitize.ENV_VAR, "1")
+    x, w = _data(0, 64, 64, 16)
+    out = grmac_matmul(x, w, tag="gain/e4m3",
+                       **_kw(fmt_x=FP8_E4M3))
+    jax.block_until_ready(out)
+    jax.effects_barrier()
+    recs = [v for v in sanitize.VIOLATIONS if v["kind"] == "gain_range"]
+    assert recs, sanitize.VIOLATIONS
+    assert recs[0]["tag"] == "gain/e4m3"
+    assert recs[0]["worst"] > 6          # beyond the C-2C ladder depth
+
+
+def test_env_is_read_per_call(_clean, monkeypatch):
+    """Flipping the env var mid-process takes effect on the next call —
+    no import-time staleness."""
+    # NaN, not Inf: Inf is clamped onto the format grid during operand
+    # decomposition and never reaches the compute line; NaN propagates
+    x, w = _data(3, 16, 64, 8)
+    x = x.at[0, 0].set(jnp.nan)
+    monkeypatch.setenv(sanitize.ENV_VAR, "1")
+    jax.block_until_ready(grmac_matmul(x, w, tag="flip", **_kw()))
+    jax.effects_barrier()
+    assert sanitize.VIOLATIONS
+    sanitize.clear()
+    monkeypatch.setenv(sanitize.ENV_VAR, "0")
+    jax.block_until_ready(grmac_matmul(x, w, tag="flip", **_kw()))
+    jax.effects_barrier()
+    assert sanitize.VIOLATIONS == []

@@ -122,6 +122,42 @@ def test_reused_slot_carries_no_state_from_previous_request():
     assert got == want
 
 
+def test_eos_as_first_prefill_token_finishes_and_surfaces(monkeypatch):
+    """A request whose FIRST prefill-sampled token is the EOS completes
+    before it ever joins a decode batch: the slot frees at add_request
+    time, and the completion still surfaces through the next
+    ``StepResult.finished`` (it previously was never reported anywhere)."""
+    eng = _engine(batch_slots=2)
+    _script_fetch(monkeypatch, [
+        [11, 99],        # request A's first token
+        [99, EOS],       # request B's first token == EOS: done at prefill
+        [12, 98],        # decode step: lane A only
+    ])
+    a = eng.add_request([3, 1], eos_id=EOS)
+    b = eng.add_request([4, 1, 5], eos_id=EOS)
+    assert list(eng.active) == [True, False]     # B freed immediately
+    assert eng.tokens[b][-1] == EOS              # the EOS itself is kept
+    s = eng.step()
+    assert s.finished == [b]                     # surfaced by the next step
+    assert dict(s) == {a: 12}                    # A decodes undisturbed
+    assert eng.step().finished == []             # reported exactly once
+
+
+def test_eos_at_prefill_on_drained_engine_surfaces_via_noop_step(monkeypatch):
+    """Even when the one-token completion leaves the engine empty, the
+    no-op step must still report it (the early-return path carries the
+    pending finishes too) — and the slot is claimable again."""
+    eng = _engine(batch_slots=1)
+    _script_fetch(monkeypatch, [[EOS]])
+    slot = eng.add_request([3, 1, 4], eos_id=EOS)
+    assert not eng.active.any()
+    assert eng.stats["decode_steps"] == 0        # never joined a batch
+    s = eng.step()
+    assert dict(s) == {} and s.finished == [slot]
+    assert eng.step().finished == []
+    assert eng.add_request([5, 9]) == slot       # free for reuse
+
+
 def test_no_eos_keeps_legacy_behavior(monkeypatch):
     """Without any EOS configured, lanes decode to max_ctx exactly as
     before — and the context-exhaustion free is reported in finished."""

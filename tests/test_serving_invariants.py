@@ -1,0 +1,73 @@
+"""Hot-path invariant harness (``repro.analysis.invariants``): the compile
+budget (one trace per (arch, bucket)/(arch, sample) executable) and the
+one-device-to-host-transfer-per-decode-step rule hold on a real serve
+script — and the harness genuinely fails when either regresses."""
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.analysis.invariants import (
+    InstrumentedEngine,
+    InvariantViolation,
+    _drive,
+    run_invariants,
+)
+from repro.configs import get_config
+from repro.models import init_params
+from repro.serving.engine import ServeConfig
+
+
+def _engine(batch_slots=2, max_ctx=64):
+    arch = get_config("qwen2-1.5b").reduced()
+    params = init_params(jax.random.PRNGKey(0), arch)
+    return arch, params, ServeConfig(batch_slots=batch_slots,
+                                     max_ctx=max_ctx)
+
+
+def test_serve_script_holds_both_invariants():
+    rep = _drive("qwen2-1.5b")
+    assert rep["compiles"] == 2              # 1 prefill + 1 decode trace
+    assert rep["fetches"] == 2 + rep["steps"]
+    assert rep["steps"] > 0
+
+
+def test_run_invariants_reports_clean():
+    out = run_invariants(configs=("qwen2-1.5b",))
+    assert out["violations"] == 0
+    assert out["failed"] == []
+    assert out["configs"]["qwen2-1.5b"]["compiles"] == 2
+
+
+def test_retrace_is_detected():
+    """A jit key whose input shapes drift is the PR-1 recompile bug; the
+    counting jit sees the second trace and check() refuses it."""
+    arch, params, cfg = _engine(batch_slots=1, max_ctx=16)
+    eng = InstrumentedEngine(arch, params, cfg)
+    f = eng._counting_jit("decode[probe]", lambda x: x * 2)
+    f(jnp.zeros((2,)))
+    f(jnp.zeros((3,)))                       # shape drift -> second trace
+    assert eng.trace_counts["decode[probe]"] == 2
+    with pytest.raises(InvariantViolation, match="more than once"):
+        eng.check()
+
+
+def test_extra_transfer_is_detected():
+    """An engine that adds a second host crossing to the decode hot path
+    must fail the step-level transfer check."""
+
+    class TwoFetchEngine(InstrumentedEngine):
+        def _compiled_decode(self, sample):
+            fn = super()._compiled_decode(sample)
+
+            def wrapped(*a, **kw):
+                ids, cache = fn(*a, **kw)
+                self._fetch(ids)             # the regression under test
+                return ids, cache
+
+            return wrapped
+
+    arch, params, cfg = _engine(batch_slots=1, max_ctx=32)
+    eng = TwoFetchEngine(arch, params, cfg)
+    eng.add_request([3, 1, 4])
+    with pytest.raises(InvariantViolation, match="transfers"):
+        eng.step()

@@ -155,7 +155,7 @@ def test_train_descends_and_restarts(tmp_path):
     tcfg = TrainConfig(
         steps=6, ckpt_dir=ckdir, ckpt_every=3, log_every=100,
         opt=OptimizerConfig(lr=1e-3, warmup_steps=2, total_steps=6))
-    m1 = train(arch, tcfg, pipe, seed=0)
+    train(arch, tcfg, pipe, seed=0)
     assert ckpt.latest_step(ckdir) == 6
     # "crash" after step 6, extend run, resume from checkpoint
     tcfg2 = TrainConfig(
