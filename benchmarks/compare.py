@@ -20,6 +20,16 @@ path:
   reshuffling silently means the design-space explorer or the energy
   model changed without the record being refreshed. A vanished front
   candidate shows up as a missing ``on_front`` leaf.
+* the traffic_bench scheduling leaves (``completed`` /
+  ``completed_in_slo`` / ``decode_steps`` / ``prefill_dispatches`` /
+  ``queue_depth_max`` / ``goodput_tokens`` / ``knee_rate_frac`` /
+  ``beats_static_above_capacity`` ...) — **exact**: the open-loop sweep
+  schedules on a virtual dispatch-cost clock over seeded traffic, so
+  every scheduling decision is machine-independent; drift means the
+  scheduler's policy changed without the record being refreshed. Its
+  wall-clock latency percentiles (``ttft_p50_ms`` / ``ttft_p99_ms`` /
+  ``tpot_p50_ms`` / ``tpot_p99_ms`` / ``goodput_tok_s``) get the usual
+  ratio + noise-floor gates.
 * the ``--bench audit`` leaves (``experiments/audit/audit_report.json``,
   see ``src/repro/analysis``) — **exact**: jaxpr MAC counts, ledger
   cross-check totals, and engine compile/transfer counters are structural
@@ -56,7 +66,11 @@ import sys
 from benchmarks.common import RESULTS_DIR
 
 # timing leaves: key -> True when larger-is-better (throughput)
-_TIME_KEYS = {"warm_us": False, "ttft_ms": False, "decode_tok_s": True}
+_TIME_KEYS = {"warm_us": False, "ttft_ms": False, "decode_tok_s": True,
+              # traffic_bench wall-clock latency percentiles + goodput
+              "ttft_p50_ms": False, "ttft_p99_ms": False,
+              "tpot_p50_ms": False, "tpot_p99_ms": False,
+              "goodput_tok_s": True}
 # deterministic leaves compared with exact equality (op-count drift gate +
 # e2e_pareto frontier-membership gate + the static-analysis audit report —
 # every audit leaf is a structural count over jaxpr traces, so any drift
@@ -68,13 +82,24 @@ _EXACT_KEYS = ("ops_per_token", "analog_ops_per_token", "on_front",
                "tagged_other", "declared_digital", "transposes", "untagged",
                "ledger_mismatches", "dtype_f32", "dtype_bf16", "calls",
                "macs", "ledger", "traced", "compiles", "fetches", "steps",
-               "violations", "failures")
+               "violations", "failures",
+               # traffic_bench scheduling leaves: the virtual dispatch-cost
+               # clock makes admission order, chunk slicing, completion and
+               # queue-depth counts pure functions of the seeded traffic —
+               # any drift means the scheduler's *decisions* changed, not a
+               # machine got slower
+               "completed", "completed_in_slo", "rejected", "preempted",
+               "sched_steps", "decode_steps", "prefill_dispatches",
+               "queue_depth_max", "generated_tokens", "goodput_tokens",
+               "knee_rate_frac", "beats_static_above_capacity",
+               "prefill_executables")
 # committed-value scale to microseconds, for the noise floor
-_TO_US = {"warm_us": 1.0, "ttft_ms": 1e3}
+_TO_US = {"warm_us": 1.0, "ttft_ms": 1e3, "ttft_p50_ms": 1e3,
+          "ttft_p99_ms": 1e3, "tpot_p50_ms": 1e3, "tpot_p99_ms": 1e3}
 
 # "audit" is gated by its own CI lane (which writes the report first and
 # compares with --no-run), so it is not in the default bench set.
-_BENCHES = ("kernel", "serve", "energy", "pareto")
+_BENCHES = ("kernel", "serve", "energy", "pareto", "traffic")
 
 # records that don't live under experiments/bench/
 _REL_OVERRIDE = {"audit_report": "experiments/audit/audit_report.json"}
@@ -190,6 +215,9 @@ def _fresh_run(bench: str):
         from repro.analysis.cli import build_report
         from repro.configs import list_configs
         return build_report(list(list_configs()), verbose=False)
+    if bench == "traffic":
+        from benchmarks import traffic_bench
+        return traffic_bench.run(**traffic_bench.SMOKE_PARAMS)
     from benchmarks import serve_bench
     return serve_bench.run(**serve_bench.SMOKE_PARAMS)
 
@@ -206,7 +234,7 @@ def run(benches=_BENCHES, threshold=1.5, min_us=300.0, fresh=True) -> list:
     regressions = []
     names = {"kernel": "kernel_bench_smoke", "serve": "serve_bench_smoke",
              "energy": "e2e_energy_smoke", "pareto": "e2e_pareto_smoke",
-             "audit": "audit_report"}
+             "traffic": "traffic_bench_smoke", "audit": "audit_report"}
     for bench in benches:
         name = names[bench]
         committed = _committed(name)
@@ -229,8 +257,8 @@ def main() -> None:
                     help="warm-time ratio above which a cell is a regression")
     ap.add_argument("--min-us", type=float, default=300.0,
                     help="skip committed cells faster than this (noise floor)")
-    ap.add_argument("--bench", default="kernel,serve,energy,pareto",
-                    help="comma list: kernel,serve,energy,pareto,audit "
+    ap.add_argument("--bench", default="kernel,serve,energy,pareto,traffic",
+                    help="comma list: kernel,serve,energy,pareto,traffic,audit "
                          "(audit gates experiments/audit/audit_report.json "
                          "exactly; its CI lane runs the CLI then this with "
                          "--no-run)")

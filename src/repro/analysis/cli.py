@@ -55,6 +55,14 @@ def build_report(config_names: List[str], phases=PHASES, *,
         if verbose:
             print(f"[audit] invariants: {res['violations']} violations "
                   f"across {len(res['configs'])} configs")
+        # the same compile/transfer rules must survive the continuous-
+        # batching layer's interleaved prefill (repro.serving.scheduler)
+        res = inv.run_scheduler_invariants()
+        report["scheduler_invariants"] = res
+        failures += res["violations"]
+        if verbose:
+            print(f"[audit] scheduler invariants: {res['violations']} "
+                  f"violations across {len(res['configs'])} configs")
     report["failures"] = failures
     return report
 

@@ -22,6 +22,17 @@ bodies are wrapped in a trace counter *before* jitting, so every
 untouched. ``check()`` raises ``InvariantViolation`` on any breach;
 ``run_invariants`` drives a deterministic serve script over a reduced
 arch subset covering the attention, RG-LRU and SSM cache families.
+
+``run_scheduler_invariants`` drives the same properties through the
+continuous-batching layer (``repro.serving.scheduler``): seeded Poisson
+traffic with a small prefill token budget, so prefill chunks genuinely
+interleave between decode steps, mid-prefill lanes ride frozen through
+decode dispatches, and freed slots are reclaimed — all without a single
+retrace, extra transfer, or new bucket executable beyond what the
+blocking path would compile. The incremental prefill API routes through
+the exact seams the harness instruments (``advance_prefill`` →
+``_compiled_prefill``; ``finish_prefill`` → ``_fetch``), so the counters
+need no scheduler-specific hooks.
 """
 from __future__ import annotations
 
@@ -33,7 +44,7 @@ import numpy as np
 from repro.serving.engine import Engine, ServeConfig, _decode_raw, _prefill_raw
 
 __all__ = ["InvariantViolation", "InstrumentedEngine", "run_invariants",
-           "INVARIANT_CONFIGS"]
+           "run_scheduler_invariants", "INVARIANT_CONFIGS"]
 
 # Reduced-arch subset covering the three cache families (attention KV,
 # RG-LRU recurrent, SSM state) — the shapes that have historically driven
@@ -154,6 +165,75 @@ def run_invariants(configs=INVARIANT_CONFIGS) -> dict:
     for name in configs:
         try:
             out[name] = _drive(name)
+        except InvariantViolation as e:   # keep auditing the rest
+            out[name] = {"error": str(e)}
+            failures.append(name)
+    return {"configs": out, "violations": len(failures),
+            "failed": failures}
+
+
+def _drive_scheduler(arch_name: str, n_requests: int = 5) -> dict:
+    """One deterministic scheduler traffic script over an instrumented
+    engine: more requests than slots, a prefill token budget small enough
+    that prompts drain across several decode iterations, and completion
+    by ``max_new_tokens`` only (no EOS), so the dispatch schedule is a
+    pure function of the seeded traffic. Checks scheduler-specific
+    arithmetic on top of ``check()``: exactly one first-token fetch per
+    admission, one decode executable, and every bucket executable traced
+    at most once despite budget-truncated chunk lengths."""
+    from repro.configs import get_config
+    from repro.models import init_params
+    from repro.serving.scheduler import (
+        Scheduler, SchedulerConfig, StepClock, run_open_loop, synth_traffic)
+
+    arch = get_config(arch_name).reduced()
+    params = init_params(jax.random.PRNGKey(0), arch)
+    eng = InstrumentedEngine(
+        arch, params, ServeConfig(batch_slots=2, max_ctx=64))
+    clock = StepClock()
+    # budget 10 > bucket_min: long prompts slice into a bucket-16 chunk
+    # plus a bucket-8 remainder, so two distinct bucket executables get
+    # exercised across interleaved steps
+    sched = Scheduler(eng, SchedulerConfig(prefill_token_budget=10),
+                      clock=clock.now)
+    traffic = synth_traffic(n_requests, 0.5, seed=0,
+                            vocab_size=arch.vocab_size,
+                            prompt_len=(3, 14), out_len=(2, 6))
+    run_open_loop(sched, traffic, tick=clock.tick)
+    report = eng.check()
+    n_decode = sum(1 for k in eng.trace_counts if k.startswith("decode"))
+    if n_decode != 1:
+        raise InvariantViolation(
+            f"{arch_name}: scheduler-driven serving traced {n_decode} "
+            f"decode executables (expected 1): {dict(eng.trace_counts)}")
+    done = [r for r in sched.finished if r.finish_reason != "rejected"]
+    if len(done) != n_requests:
+        raise InvariantViolation(
+            f"{arch_name}: {len(done)}/{n_requests} requests completed "
+            "under the scheduler")
+    # one first-token selection per admission (re-admissions after
+    # preemption would add theirs; this script never preempts) + one
+    # fetch per decode step — nothing else may cross the device boundary
+    want = sched.stats["admitted"] + eng.steps_checked
+    if eng.fetches != want:
+        raise InvariantViolation(
+            f"{arch_name}: {eng.fetches} fetches for "
+            f"{sched.stats['admitted']} admissions + {eng.steps_checked} "
+            f"decode steps (expected {want})")
+    report["completed"] = len(done)
+    report["prefill_executables"] = sum(
+        1 for k in eng.trace_counts if k.startswith("prefill"))
+    return report
+
+
+def run_scheduler_invariants(configs=INVARIANT_CONFIGS) -> dict:
+    """Scheduler-layer invariant run (see ``_drive_scheduler``); same
+    report shape as ``run_invariants``."""
+    out: Dict[str, dict] = {}
+    failures: List[str] = []
+    for name in configs:
+        try:
+            out[name] = _drive_scheduler(name)
         except InvariantViolation as e:   # keep auditing the rest
             out[name] = {"error": str(e)}
             failures.append(name)

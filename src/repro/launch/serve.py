@@ -3,9 +3,18 @@ requests through the slot engine (bucketed chunked prefill + on-device
 sampling by default; ``--prefill-mode token`` runs the legacy
 one-dispatch-per-token baseline for comparison).
 
+``--traffic N`` switches to open-loop serving: N seeded Poisson arrivals
+at ``--rate`` requests/s are pushed through the continuous-batching
+``Scheduler`` on the wall clock (real sleeps between arrivals), printing
+per-request streams as they finish and the TTFT/TPOT percentile + goodput
+summary at the end — the interactive twin of
+``benchmarks/traffic_bench.py``'s virtual-clock sweep.
+
 Usage:
     PYTHONPATH=src python -m repro.launch.serve --arch gemma3-1b --reduced \
         --tokens 32
+    PYTHONPATH=src python -m repro.launch.serve --arch gemma3-1b --reduced \
+        --traffic 12 --rate 20
 """
 import argparse
 import time
@@ -15,6 +24,40 @@ import jax
 from repro.configs import get_config
 from repro.models import init_params
 from repro.serving.engine import Engine, ServeConfig, energy_report
+from repro.serving.scheduler import (
+    Scheduler, SchedulerConfig, run_open_loop, synth_traffic)
+
+
+def _serve_traffic(arch, params, args) -> None:
+    eng = Engine(arch, params, ServeConfig(batch_slots=args.slots,
+                                           max_ctx=args.ctx))
+    sched = Scheduler(
+        eng, SchedulerConfig(prefill_token_budget=args.prefill_budget))
+    traffic = synth_traffic(args.traffic, args.rate, seed=args.seed,
+                            vocab_size=arch.vocab_size,
+                            prompt_len=(8, 48),
+                            out_len=(4, args.tokens))
+    t0 = time.perf_counter()
+    run_open_loop(sched, traffic)
+    wall = time.perf_counter() - t0
+    for r in sorted(sched.finished, key=lambda r: r.rid):
+        print(f"req {r.rid:3d}: prompt={len(r.prompt):3d} tok, "
+              f"generated={r.n_generated:3d} ({r.finish_reason}), "
+              f"ttft={1e3 * (r.ttft_wall or 0.0):7.1f} ms, "
+              f"tpot={1e3 * (r.tpot_wall or 0.0):6.2f} ms"
+              + (f", preempted x{r.preemptions}" if r.preemptions else ""))
+    m = sched.metrics(slo_ttft=None)
+    print(f"\ntraffic: {m['completed']} completed / {m['rejected']} rejected "
+          f"in {wall:.2f} s at {args.rate:g} req/s "
+          f"({m['decode_steps']} decode steps, "
+          f"{m['prefill_dispatches']} prefill dispatches, "
+          f"queue depth max {m['queue_depth_max']})")
+    print(f"TTFT p50/p99: {m['ttft_p50_ms']:.1f}/{m['ttft_p99_ms']:.1f} ms | "
+          f"TPOT p50/p99: {m['tpot_p50_ms']:.2f}/{m['tpot_p99_ms']:.2f} ms | "
+          f"goodput {m['goodput_tok_s']:.1f} tok/s")
+    if arch.cim.enabled:
+        print(f"energy: {m['pj_per_token']:.1f} pJ/token "
+              f"({m['energy_pj'] / 1e6:.2f} uJ total decode)")
 
 
 def main():
@@ -27,6 +70,15 @@ def main():
     ap.add_argument("--ctx", type=int, default=256)
     ap.add_argument("--prefill-mode", default="bucketed",
                     choices=["bucketed", "token"])
+    ap.add_argument("--traffic", type=int, default=0, metavar="N",
+                    help="serve N open-loop Poisson arrivals through the "
+                         "continuous-batching scheduler instead of the "
+                         "fixed two-prompt demo")
+    ap.add_argument("--rate", type=float, default=20.0,
+                    help="--traffic arrival rate, requests per second")
+    ap.add_argument("--prefill-budget", type=int, default=16,
+                    help="--traffic prefill tokens interleaved per step")
+    ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
 
     arch = get_config(args.arch)
@@ -35,6 +87,9 @@ def main():
     if args.cim != "off":
         arch = arch.replace(cim=arch.cim.with_mode(args.cim))
     params = init_params(jax.random.PRNGKey(0), arch)
+    if args.traffic:
+        _serve_traffic(arch, params, args)
+        return
     eng = Engine(arch, params, ServeConfig(batch_slots=args.slots,
                                            max_ctx=args.ctx,
                                            prefill_mode=args.prefill_mode))

@@ -1,0 +1,44 @@
+"""Serving stack: the slot ``Engine`` and the continuous-batching
+``Scheduler`` above it.
+
+Two layers, one seam
+--------------------
+* ``engine``    — mechanism. Fixed-size decode batch ("slots"), bucketed
+  chunked prefill (one compiled dispatch per power-of-two chunk), fused
+  on-device sampling (exactly one device→host transfer per decode step),
+  per-slot EOS freeing, and ledger-derived pJ/token
+  (``StepResult.pj_per_token``). The incremental prefill API
+  (``begin_request`` / ``advance_prefill`` / ``finish_prefill`` /
+  ``release_slot`` / ``free_slots``) is the scheduler seam:
+  ``add_request`` is the blocking composition of the same methods.
+* ``scheduler`` — policy. FIFO queue with WAITING → PREFILLING →
+  RUNNING → FINISHED states (plus PREEMPTED under overload), admission
+  control against free slots and ``max_ctx``, chunked prefill
+  interleaved into decode iterations under a per-step token budget, and
+  per-request TTFT/TPOT/pJ-per-token accounting with SLO-conditioned
+  goodput. See ``scheduler``'s module docstring for the state machine,
+  budget semantics, preemption policy, and goodput definitions.
+
+Benchmarks: ``benchmarks/serve_bench.py`` (fixed-batch TTFT/TPOT),
+``benchmarks/traffic_bench.py`` (open-loop Poisson traffic: goodput vs
+arrival rate, saturation knee, continuous vs static batching).
+Invariants: ``repro.analysis.invariants`` proves the compile budget and
+one-transfer-per-step rules hold under both hand-placed and
+scheduler-driven serving.
+"""
+from repro.serving.engine import Engine, ServeConfig, StepResult, energy_report
+from repro.serving.scheduler import (
+    Request,
+    Scheduler,
+    SchedulerConfig,
+    StaticBatchScheduler,
+    StepClock,
+    run_open_loop,
+    synth_traffic,
+)
+
+__all__ = [
+    "Engine", "ServeConfig", "StepResult", "energy_report",
+    "Request", "Scheduler", "SchedulerConfig", "StaticBatchScheduler",
+    "StepClock", "run_open_loop", "synth_traffic",
+]

@@ -50,12 +50,40 @@ The seams the harness instruments are ``_decode_raw``/``_prefill_raw``
 (the unjitted step bodies), ``_compiled_decode``/``_compiled_prefill``
 (the per-engine dispatch points), and ``_fetch``; keep new hot-path code
 flowing through them.
+
+Incremental prefill (the scheduler seam)
+----------------------------------------
+``add_request`` runs a prompt's whole prefill in one blocking burst. The
+continuous-batching scheduler (``repro.serving.scheduler``) instead needs
+to drain prefills *chunk by chunk between decode steps*, so the engine
+exposes the burst's three phases as first-class methods:
+
+* ``begin_request(prompt)``  — claim + validate a slot (the lane is
+  reserved but NOT in the decode batch yet);
+* ``advance_prefill(slot, max_tokens)`` — one bucketed chunk dispatch of
+  at most ``max_tokens`` prompt tokens (same power-of-two bucket
+  executables as ``add_request``: no new compiles);
+* ``finish_prefill(slot, key)`` — select the first output token from the
+  last chunk's logits and activate the lane for decode.
+
+``add_request`` is now literally ``begin → advance-until-drained →
+finish``, so both entry points share one code path and stay equivalent.
+``release_slot`` frees a lane mid-flight (scheduler-side stops at
+``max_new_tokens``, preemption); ``free_slots`` is the admission-control
+counter (active and mid-prefill lanes both count as occupied).
+
+Sampling contract: ``temperature > 0`` samples **only when a PRNG key is
+passed** — ``add_request``/``finish_prefill`` with ``temperature > 0``
+and no ``key`` fall back to greedy argmax *with an explicit
+``UserWarning``* (``step`` applies the same key-gated rule silently,
+since it is called once per token; pass ``key=`` everywhere to sample).
 """
 from __future__ import annotations
 
 import dataclasses
 import functools
-from typing import List, Optional
+import warnings
+from typing import Dict, List, Optional
 
 import jax
 import jax.numpy as jnp
@@ -211,6 +239,12 @@ class Engine:
         # slots that have hosted a request (their cache state is dirty and
         # must be zeroed before reuse)
         self._dirty = np.zeros(cfg.batch_slots, bool)
+        # slots claimed by a request whose prefill has not finished yet:
+        # reserved (not claimable) but not in the decode batch either
+        self._prefilling = np.zeros(cfg.batch_slots, bool)
+        # per-slot prompt tokens not yet prefilled / last chunk's logits
+        self._pending_prompt: Dict[int, List[int]] = {}
+        self._pending_logits: Dict[int, jax.Array] = {}
         # slots completed outside step() (first prefill token == EOS),
         # surfaced through the next StepResult.finished
         self._pending_finished: List[int] = []
@@ -267,7 +301,39 @@ class Engine:
         ``eos_id`` overrides ``cfg.eos_id`` for this request: the lane is
         freed as soon as it emits that token (the EOS itself is kept in
         ``tokens``), making the slot claimable by the next ``add_request``.
+
+        Sampling: with ``temperature > 0`` the first token is sampled
+        **only when** ``key`` is passed; ``temperature > 0`` without a
+        key falls back to greedy argmax with a ``UserWarning`` (the
+        explicit form of what used to happen silently — ``step`` applies
+        the same key-gated rule).
         """
+        slot = self.begin_request(prompt, eos_id=eos_id)
+        if self.cfg.prefill_mode == "token":
+            sample = self._resolve_sampling(key)
+            self._pending_prompt.pop(slot, None)
+            for t in prompt[:-1]:
+                self._advance_slot(slot, t)
+            # the final dispatch's ids ARE the last-valid-token selection
+            first = self._advance_slot(slot, prompt[-1], sample=sample,
+                                       key=key)
+            self._adopt_first_token(slot, first)
+        else:
+            while self.prefill_remaining(slot):
+                self.advance_prefill(slot)
+            self.finish_prefill(slot, key=key)
+        return slot
+
+    # ------------------------------------------------- incremental prefill
+    def begin_request(self, prompt: List[int],
+                      eos_id: Optional[int] = None) -> int:
+        """Claim and validate a free slot for ``prompt`` without running
+        any prefill: the lane is *reserved* (``free_slots`` excludes it)
+        but not yet in the decode batch. The scheduler drains the prompt
+        through ``advance_prefill`` between decode steps and activates the
+        lane with ``finish_prefill``; ``add_request`` is the blocking
+        begin → advance-until-drained → finish composition of the same
+        methods."""
         if not prompt:
             raise ValueError("empty prompt")
         if len(prompt) >= self.cfg.max_ctx:
@@ -278,7 +344,7 @@ class Engine:
             raise ValueError(
                 f"prompt of {len(prompt)} tokens needs max_ctx > "
                 f"{len(prompt)} (got {self.cfg.max_ctx}) to decode")
-        free = np.where(~self.active)[0]
+        free = np.where(~self.active & ~self._prefilling)[0]
         if len(free) == 0:
             raise RuntimeError("no free slots")
         slot = int(free[0])
@@ -287,33 +353,99 @@ class Engine:
         self._dirty[slot] = True
         self.tokens[slot] = list(prompt)
         self.lengths[slot] = 0
-        self.active[slot] = True
+        self._prefilling[slot] = True
+        self._pending_prompt[slot] = list(prompt)
+        self._pending_logits.pop(slot, None)
         eos = eos_id if eos_id is not None else self.cfg.eos_id
         self._eos[slot] = -1 if eos is None else int(eos)
-        sample = self.cfg.temperature > 0 and key is not None
-        if self.cfg.prefill_mode == "token":
-            for t in prompt[:-1]:
-                self._advance_slot(slot, t)
-            # the final dispatch's ids ARE the last-valid-token selection
-            first = self._advance_slot(slot, prompt[-1], sample=sample,
-                                       key=key)
-        else:
-            pos = 0
-            logits = None
-            while pos < len(prompt):
-                chunk = prompt[pos:pos + self.cfg.prefill_bucket_max]
-                logits = self._prefill_chunk(slot, chunk)
-                pos += len(chunk)
-            first = self._select_token(logits, slot, sample, key)
+        return slot
+
+    def prefill_remaining(self, slot: int) -> int:
+        """Prompt tokens of ``slot`` not yet prefilled (0 once drained)."""
+        return len(self._pending_prompt.get(slot, ()))
+
+    def advance_prefill(self, slot: int,
+                        max_tokens: Optional[int] = None) -> int:
+        """One bucketed chunk dispatch for a mid-prefill slot: consumes
+        ``min(remaining, prefill_bucket_max, max_tokens)`` prompt tokens
+        through the shared power-of-two bucket executables (a budget-
+        truncated chunk pads up to the next bucket, so interleaving never
+        compiles anything the blocking path would not). Returns the number
+        of tokens consumed; the chunk's last-valid-token logits are kept
+        on device for ``finish_prefill``."""
+        rem = self._pending_prompt[slot]
+        take = min(len(rem), self.cfg.prefill_bucket_max)
+        if max_tokens is not None:
+            take = min(take, int(max_tokens))
+        if take <= 0:
+            return 0
+        self._pending_logits[slot] = self._prefill_chunk(slot, rem[:take])
+        del rem[:take]
+        return take
+
+    def finish_prefill(self, slot: int,
+                       key: Optional[jax.Array] = None) -> int:
+        """Select the first output token from the final chunk's logits and
+        activate the lane for decode (or finish it immediately when that
+        token is the request's EOS — see ``add_request``). Requires the
+        prompt fully drained. Applies the documented sampling contract:
+        ``temperature > 0`` without ``key`` warns and falls back to greedy
+        argmax."""
+        if self.prefill_remaining(slot):
+            raise RuntimeError(
+                f"slot {slot}: {self.prefill_remaining(slot)} prompt "
+                "tokens still pending — drain with advance_prefill first")
+        sample = self._resolve_sampling(key)
+        logits = self._pending_logits.pop(slot)
+        del self._pending_prompt[slot]
+        first = self._select_token(logits, slot, sample, key)
+        self._adopt_first_token(slot, first)
+        return first
+
+    def _adopt_first_token(self, slot: int, first: int) -> None:
+        """Shared end-of-prefill bookkeeping: record the first generated
+        token and either join the decode batch or finish at once (first
+        token == EOS: the slot never joins a decode batch, so the
+        completion is surfaced through the next ``StepResult.finished``)."""
         self.tokens[slot].append(first)
         self._last_host[slot] = first
+        self._prefilling[slot] = False
         if self._eos[slot] >= 0 and first == self._eos[slot]:
-            # one-token completion: free at once, and surface it through
-            # the next StepResult.finished (the slot never joins a decode
-            # batch, so step() would otherwise never report it)
             self.active[slot] = False
             self._pending_finished.append(slot)
-        return slot
+        else:
+            self.active[slot] = True
+
+    def release_slot(self, slot: int) -> None:
+        """Free a lane regardless of progress — the scheduler's stop seam
+        (request hit its ``max_new_tokens``; preemption under overload).
+        Mid-prefill state is discarded; the dirty flag stays set so the
+        next claim zeroes the lane's recurrent cache state."""
+        self.active[slot] = False
+        self._prefilling[slot] = False
+        self._pending_prompt.pop(slot, None)
+        self._pending_logits.pop(slot, None)
+
+    def free_slots(self) -> int:
+        """Slots claimable by ``begin_request``/``add_request`` right now
+        (neither decoding nor mid-prefill) — the admission-control count."""
+        return int(np.sum(~self.active & ~self._prefilling))
+
+    def _resolve_sampling(self, key: Optional[jax.Array]) -> bool:
+        """The engine-wide sampling rule: sample iff ``temperature > 0``
+        AND a key was passed. The no-key fallback to greedy is explicit
+        here (satellite of the scheduler PR): it warns instead of silently
+        diverging from what a ``temperature > 0`` caller expects."""
+        if self.cfg.temperature <= 0:
+            return False
+        if key is None:
+            warnings.warn(
+                "temperature > 0 but no PRNG key passed: falling back to "
+                "greedy argmax for this token. Pass key= to sample "
+                "(Engine.step applies the same key-gated rule).",
+                UserWarning, stacklevel=3)
+            return False
+        return True
 
     def _select_token(self, logits_dev: jax.Array, slot: int,
                       sample: bool, key: Optional[jax.Array]) -> int:

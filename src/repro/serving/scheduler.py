@@ -1,0 +1,569 @@
+"""Continuous-batching scheduler over the slot ``Engine``.
+
+The engine has the fast serving primitives — bucketed chunked prefill,
+fused one-transfer decode, per-slot EOS freeing — but no brain above
+them: callers hand-place requests into slots and ``add_request`` raises
+when they are full. This module is that brain: a vLLM-style scheduler
+with a FIFO request queue, admission control, chunked prefill
+*interleaved* into decode iterations under a per-step token budget, and
+per-request TTFT/TPOT/pJ-per-token accounting.
+
+Queue states
+------------
+::
+
+    WAITING ──admit──▶ PREFILLING ──finish_prefill──▶ RUNNING ──▶ FINISHED
+       ▲                    │                            │
+       └────── PREEMPTED ◀──┴────────────────────────────┘
+
+* **WAITING**    — queued, no slot. FIFO order (arrival order as
+  submitted; re-queued preempted requests go to the *back*).
+* **PREFILLING** — slot claimed (``Engine.begin_request``); the prompt
+  drains chunk-by-chunk through ``advance_prefill``. The lane is not in
+  the decode batch yet, so mid-prefill requests cost decode lanes
+  nothing.
+* **RUNNING**    — prefill finished (``finish_prefill`` sampled the first
+  output token — that instant is the request's TTFT); the lane decodes
+  one token per engine step.
+* **PREEMPTED**  — evicted under overload (see below); resumes by
+  *recompute*: its prompt-so-far (original prompt + generated tokens)
+  re-prefills when re-admitted, which reconstructs the evicted cache
+  exactly, so a preempted greedy request's token stream is identical to
+  an uninterrupted run.
+* **FINISHED**   — terminal. ``finish_reason`` is one of ``"eos"``
+  (engine-reported EOS), ``"length"`` (scheduler-side ``max_new_tokens``
+  stop, or a resume that can no longer fit the context), ``"ctx"``
+  (engine context exhaustion at ``max_ctx``), or ``"rejected"``
+  (admission control: the prompt can never fit ``max_ctx``).
+
+Prefill token budget
+--------------------
+``SchedulerConfig.prefill_token_budget`` caps how many *prompt* tokens
+may be prefilled per scheduler step, spent FIFO across PREFILLING
+requests. Each spend is one bucketed chunk dispatch of at most
+``min(budget_left, remaining, prefill_bucket_max)`` tokens — a
+budget-truncated chunk pads up to the next power-of-two bucket, so
+interleaving reuses exactly the bucket executables the blocking path
+compiles (no new compiles). A bounded budget keeps running lanes'
+inter-token latency (TPOT) bounded: every scheduler step runs at most
+``budget`` prompt tokens of prefill before the decode dispatch. Budget
+``None`` prefills each admitted prompt to completion at admission — with
+that setting and a never-overflowing arrival schedule the scheduler is
+dispatch-for-dispatch identical to hand-placed
+``add_request``/``step`` calls (tested in tests/test_scheduler.py).
+
+Preemption policy
+-----------------
+Slots are fixed-size dense caches, so there is no mid-decode memory
+overflow to react to; preemption here is queue-overload anti-starvation,
+off by default. With ``preempt_age`` set, when the queue head has waited
+longer than ``preempt_age`` (policy-clock units) and no slot is free,
+the scheduler evicts the most recently admitted in-flight request (LIFO,
+at most one per step, ``Engine.release_slot``) and re-queues it at the
+back in recompute mode. The freed slot admits the starved head on the
+same step.
+
+Goodput
+-------
+``Scheduler.metrics(slo_ttft=...)`` defines goodput the way the serving
+literature does: **completed tokens per unit time counting only requests
+that met the latency SLO** (here: policy-clock TTFT ≤ ``slo_ttft``;
+rejected requests never count). Tokens-per-policy-step
+(``goodput_tok_per_step``) is deterministic under the virtual
+``StepClock`` — the bench gates it exactly — while
+``goodput_tok_s`` uses wall time. The open-loop traffic bench
+(benchmarks/traffic_bench.py) sweeps Poisson arrival rates through this
+and reports the saturation knee.
+
+Clocks: every event is stamped twice — with the injectable policy
+``clock`` (virtual ``StepClock`` in benches: deterministic scheduling
+and SLO accounting) and with ``time.perf_counter()`` wall time (latency
+metrics in ms, machine-dependent). Real deployments pass a wall clock as
+the policy clock and the two coincide.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from collections import deque
+from typing import Callable, Deque, Dict, List, Optional, Sequence
+
+import jax
+import numpy as np
+
+from repro.serving.engine import Engine
+
+__all__ = [
+    "WAITING", "PREFILLING", "RUNNING", "PREEMPTED", "FINISHED",
+    "Request", "SchedulerConfig", "Scheduler", "StaticBatchScheduler",
+    "StepClock", "synth_traffic", "run_open_loop",
+]
+
+# request states (plain strings: they go straight into JSON reports)
+WAITING = "waiting"
+PREFILLING = "prefilling"
+RUNNING = "running"
+PREEMPTED = "preempted"
+FINISHED = "finished"
+
+
+@dataclasses.dataclass
+class Request:
+    """One queued generation request plus its measured lifecycle.
+
+    ``t_*`` timestamps are policy-clock (virtual steps in the benches),
+    ``wall_*`` are ``time.perf_counter()`` seconds; ``generated`` holds
+    every emitted token including the prefill-sampled first one, across
+    preemptions."""
+    rid: int
+    prompt: List[int]
+    max_new_tokens: int
+    arrival: float
+    eos_id: Optional[int] = None
+    state: str = WAITING
+    slot: Optional[int] = None
+    finish_reason: Optional[str] = None
+    generated: List[int] = dataclasses.field(default_factory=list)
+    preemptions: int = 0
+    # resume prompt after preemption (original prompt + generated so far)
+    resume_prompt: Optional[List[int]] = None
+    t_admit: Optional[float] = None
+    t_first: Optional[float] = None
+    t_finish: Optional[float] = None
+    wall_arrival: Optional[float] = None
+    wall_admit: Optional[float] = None
+    wall_first: Optional[float] = None
+    wall_finish: Optional[float] = None
+
+    @property
+    def n_generated(self) -> int:
+        return len(self.generated)
+
+    @property
+    def ttft(self) -> Optional[float]:
+        if self.t_first is None:
+            return None
+        return self.t_first - self.arrival
+
+    @property
+    def ttft_wall(self) -> Optional[float]:
+        if self.wall_first is None or self.wall_arrival is None:
+            return None
+        return self.wall_first - self.wall_arrival
+
+    @property
+    def tpot_wall(self) -> Optional[float]:
+        """Wall seconds per output token after the first (None until
+        finished or with a single token)."""
+        if self.wall_finish is None or self.wall_first is None:
+            return None
+        if self.n_generated <= 1:
+            return None
+        return (self.wall_finish - self.wall_first) / (self.n_generated - 1)
+
+
+@dataclasses.dataclass
+class SchedulerConfig:
+    # max prompt tokens prefilled per scheduler step (None = unbounded:
+    # every admitted prompt prefills to completion at admission, i.e. the
+    # blocking add_request behavior)
+    prefill_token_budget: Optional[int] = 128
+    # anti-starvation preemption (None = never preempt): when the queue
+    # head has waited > preempt_age policy units and no slot is free,
+    # evict the most recently admitted in-flight request (recompute)
+    preempt_age: Optional[float] = None
+
+
+class Scheduler:
+    """FIFO continuous-batching scheduler over one ``Engine``.
+
+    Drive it with ``submit`` + repeated ``step`` (or ``run_open_loop``
+    for a pre-generated arrival trace). Requires the engine's bucketed
+    prefill mode — the token-mode oracle has no chunk seam to interleave
+    through."""
+
+    def __init__(self, engine: Engine, cfg: SchedulerConfig = None, *,
+                 clock: Callable[[], float] = time.perf_counter):
+        if engine.cfg.prefill_mode != "bucketed":
+            raise ValueError(
+                "scheduler requires prefill_mode='bucketed' (the token "
+                "oracle has no chunk seam to interleave through)")
+        self.engine = engine
+        self.cfg = cfg or SchedulerConfig()
+        self.clock = clock
+        self.waiting: Deque[Request] = deque()
+        self.prefilling: List[Request] = []     # admission order
+        self.running: Dict[int, Request] = {}   # slot -> request
+        self.finished: List[Request] = []
+        self.requests: List[Request] = []
+        self._next_rid = 0
+        self._last_result = None
+        self.stats = {"steps": 0, "decode_steps": 0, "admitted": 0,
+                      "preempted": 0, "rejected": 0,
+                      "queue_depth_max": 0, "queue_depth_sum": 0}
+
+    # ------------------------------------------------------------ intake
+    def submit(self, prompt: Sequence[int], max_new_tokens: int,
+               eos_id: Optional[int] = None,
+               arrival: Optional[float] = None) -> Request:
+        """Queue a request (state WAITING). ``arrival`` defaults to the
+        policy clock's now; open-loop traffic passes the trace's arrival
+        time so queueing delay is measured against the *offered* load."""
+        if max_new_tokens < 1:
+            raise ValueError("max_new_tokens must be >= 1")
+        r = Request(rid=self._next_rid, prompt=list(prompt),
+                    max_new_tokens=int(max_new_tokens), eos_id=eos_id,
+                    arrival=self.clock() if arrival is None else arrival,
+                    wall_arrival=time.perf_counter())
+        self._next_rid += 1
+        self.requests.append(r)
+        self.waiting.append(r)
+        return r
+
+    def idle(self) -> bool:
+        return not (self.waiting or self.prefilling or self.running)
+
+    @property
+    def pj_per_token(self) -> Optional[float]:
+        """Decode-phase CIM pJ per generated token, threaded from the
+        last ``StepResult.pj_per_token`` (lazily priced; None before the
+        first decode step or when the arch serves without the CIM path)."""
+        if self._last_result is None:
+            return None
+        return self._last_result.pj_per_token
+
+    # ----------------------------------------------------------- lifecycle
+    def _finish(self, r: Request, reason: str, now: float,
+                wall: float) -> None:
+        r.state = FINISHED
+        r.finish_reason = reason
+        r.t_finish = now
+        r.wall_finish = wall
+        r.slot = None
+        self.finished.append(r)
+
+    def _admissible(self) -> int:
+        """Slots this step's admission phase may claim (the hook the
+        static-batching baseline overrides)."""
+        return self.engine.free_slots()
+
+    def _admit(self, now: float, wall: float) -> List[Request]:
+        admitted = []
+        budget = self._admissible()
+        while self.waiting and budget > 0:
+            r = self.waiting[0]
+            prompt = r.resume_prompt if r.resume_prompt is not None \
+                else r.prompt
+            if len(prompt) >= self.engine.cfg.max_ctx:
+                self.waiting.popleft()
+                if r.resume_prompt is not None:
+                    # a resume that no longer fits: keep what it generated
+                    self._finish(r, "length", now, wall)
+                else:
+                    self.stats["rejected"] += 1
+                    self._finish(r, "rejected", now, wall)
+                continue
+            self.waiting.popleft()
+            r.slot = self.engine.begin_request(prompt, eos_id=r.eos_id)
+            r.state = PREFILLING
+            r.t_admit = now
+            r.wall_admit = wall
+            self.prefilling.append(r)
+            self.stats["admitted"] += 1
+            admitted.append(r)
+            budget -= 1
+        return admitted
+
+    def _spend_prefill_budget(self, now: float,
+                              key: Optional[jax.Array]) -> int:
+        budget = self.cfg.prefill_token_budget
+        spent = 0
+        for r in list(self.prefilling):
+            while self.engine.prefill_remaining(r.slot):
+                left = None if budget is None else budget - spent
+                if left is not None and left <= 0:
+                    return spent
+                got = self.engine.advance_prefill(r.slot, max_tokens=left)
+                spent += got
+            # prompt drained: first output token now, TTFT stamps here
+            sub = None if key is None else jax.random.fold_in(key, r.rid)
+            first = self.engine.finish_prefill(r.slot, key=sub)
+            self.prefilling.remove(r)
+            r.generated.append(first)
+            r.t_first = now
+            r.wall_first = time.perf_counter()
+            if not self.engine.active[r.slot]:
+                # first token was the EOS: engine freed the slot already
+                self._finish(r, "eos", now, r.wall_first)
+            elif r.n_generated >= r.max_new_tokens:
+                self.engine.release_slot(r.slot)
+                self._finish(r, "length", now, r.wall_first)
+            else:
+                r.state = RUNNING
+                self.running[r.slot] = r
+        return spent
+
+    def _decode(self, now: float, key: Optional[jax.Array]) -> dict:
+        result = self.engine.step(key)
+        self._last_result = result
+        self.stats["decode_steps"] += 1
+        wall = time.perf_counter()
+        for slot, tok in result.items():
+            r = self.running.get(slot)
+            if r is not None:
+                r.generated.append(tok)
+        for slot in result.finished:
+            # engine-side completion: EOS, or context exhaustion. Slots
+            # with no bound request (e.g. freed at prefill time and
+            # already accounted) are skipped.
+            r = self.running.pop(slot, None)
+            if r is None:
+                continue
+            eos = r.eos_id if r.eos_id is not None else self.engine.cfg.eos_id
+            reason = "eos" if (eos is not None and r.generated
+                               and r.generated[-1] == eos) else "ctx"
+            self._finish(r, reason, now, wall)
+        for slot, r in list(self.running.items()):
+            if r.n_generated >= r.max_new_tokens:
+                self.engine.release_slot(slot)
+                del self.running[slot]
+                self._finish(r, "length", now, wall)
+        return dict(result)
+
+    def _maybe_preempt(self, now: float) -> Optional[Request]:
+        age = self.cfg.preempt_age
+        if age is None or not self.waiting:
+            return None
+        if self.engine.free_slots() > 0:
+            return None
+        if (now - self.waiting[0].arrival) <= age:
+            return None
+        live = self.prefilling + list(self.running.values())
+        if not live:
+            return None
+        victim = max(live, key=lambda r: r.t_admit)   # LIFO: newest admit
+        self.engine.release_slot(victim.slot)
+        if victim in self.prefilling:
+            self.prefilling.remove(victim)
+        else:
+            del self.running[victim.slot]
+        victim.state = PREEMPTED
+        victim.slot = None
+        victim.preemptions += 1
+        # recompute resume: re-prefill everything emitted so far, which
+        # reconstructs the evicted cache exactly (greedy streams are
+        # preemption-invariant — tested)
+        victim.resume_prompt = list(victim.prompt) + list(victim.generated)
+        self.waiting.append(victim)   # back of the queue: FIFO fairness
+        self.stats["preempted"] += 1
+        return victim
+
+    # ------------------------------------------------------------- step
+    def step(self, key: Optional[jax.Array] = None) -> dict:
+        """One scheduler iteration: preempt (if starving) → admit →
+        budgeted prefill → one decode dispatch for the running lanes.
+        Returns a summary dict (admitted/prefilled/decoded/finished
+        counts) for observability; request objects carry the full
+        accounting. Pass ``key`` to sample (split per use; greedy
+        otherwise)."""
+        now = self.clock()
+        wall = time.perf_counter()
+        self.stats["steps"] += 1
+        depth = len(self.waiting)
+        self.stats["queue_depth_max"] = max(self.stats["queue_depth_max"],
+                                            depth)
+        self.stats["queue_depth_sum"] += depth
+
+        self._maybe_preempt(now)
+        k_fill = k_dec = None
+        if key is not None:
+            k_fill, k_dec = jax.random.split(key)
+        admitted = self._admit(now, wall)
+        n_before = len(self.finished)
+        spent = self._spend_prefill_budget(now, k_fill)
+        decoded = self._decode(now, k_dec) if self.running else {}
+        return {
+            "admitted": [r.rid for r in admitted],
+            "prefill_tokens": spent,
+            "decoded": decoded,
+            "finished": [r.rid for r in self.finished[n_before:]],
+            "queue_depth": depth,
+        }
+
+    # ----------------------------------------------------------- metrics
+    def metrics(self, slo_ttft: Optional[float] = None) -> dict:
+        """Aggregate serving metrics over finished requests.
+
+        ``slo_ttft`` is a policy-clock TTFT bound; requests over it (or
+        rejected) are excluded from goodput. Latency percentiles are
+        reported in wall ms (machine-dependent) and policy units
+        (deterministic under ``StepClock``)."""
+        done = [r for r in self.finished if r.finish_reason != "rejected"]
+        ttft_w = [r.ttft_wall for r in done if r.ttft_wall is not None]
+        tpot_w = [r.tpot_wall for r in done if r.tpot_wall is not None]
+        ttft_p = [r.ttft for r in done if r.ttft is not None]
+        in_slo = [r for r in done
+                  if slo_ttft is None
+                  or (r.ttft is not None and r.ttft <= slo_ttft)]
+        good_tokens = sum(r.n_generated for r in in_slo)
+        t0 = min((r.arrival for r in self.requests), default=0.0)
+        t1 = max((r.t_finish for r in done), default=t0)
+        w0 = min((r.wall_arrival for r in self.requests), default=0.0)
+        w1 = max((r.wall_finish for r in done), default=w0)
+        makespan = max(t1 - t0, 1e-12)
+        wall_s = max(w1 - w0, 1e-12)
+
+        def pct(xs, q, scale=1.0):
+            return float(np.percentile(xs, q) * scale) if xs else None
+
+        pj = self.pj_per_token
+        return {
+            "completed": len(done),
+            "completed_in_slo": len(in_slo),
+            "rejected": self.stats["rejected"],
+            "preempted": self.stats["preempted"],
+            "sched_steps": self.stats["steps"],
+            "decode_steps": self.stats["decode_steps"],
+            "prefill_dispatches": self.engine.stats["prefill_dispatches"],
+            "queue_depth_max": self.stats["queue_depth_max"],
+            "queue_depth_mean": (self.stats["queue_depth_sum"]
+                                 / max(1, self.stats["steps"])),
+            "generated_tokens": sum(r.n_generated for r in done),
+            "goodput_tokens": good_tokens,
+            "makespan_steps": makespan,
+            "goodput_tok_per_step": good_tokens / makespan,
+            "wall_s": wall_s,
+            "goodput_tok_s": good_tokens / wall_s,
+            "ttft_p50_ms": pct(ttft_w, 50, 1e3),
+            "ttft_p99_ms": pct(ttft_w, 99, 1e3),
+            "tpot_p50_ms": pct(tpot_w, 50, 1e3),
+            "tpot_p99_ms": pct(tpot_w, 99, 1e3),
+            "ttft_p50_steps": pct(ttft_p, 50),
+            "ttft_p99_steps": pct(ttft_p, 99),
+            "pj_per_token": pj,
+            "energy_pj": (None if pj is None
+                          else pj * sum(r.n_generated for r in done)),
+        }
+
+
+class StaticBatchScheduler(Scheduler):
+    """The naive blocking-admission baseline: admission waits for the
+    WHOLE previous batch to drain (classic static batching — the
+    pre-continuous-batching world), and every admitted prompt prefills
+    to completion before any decode resumes. Same engine, same
+    dispatches per request; freed slots simply idle while stragglers
+    finish. The traffic bench measures continuous batching against
+    this."""
+
+    def __init__(self, engine: Engine, cfg: SchedulerConfig = None, *,
+                 clock: Callable[[], float] = time.perf_counter):
+        cfg = dataclasses.replace(cfg or SchedulerConfig(),
+                                  prefill_token_budget=None,
+                                  preempt_age=None)
+        super().__init__(engine, cfg, clock=clock)
+
+    def _admissible(self) -> int:
+        if self.running or self.prefilling:
+            return 0
+        return self.engine.free_slots()
+
+
+class StepClock:
+    """Virtual policy clock in *dispatch-cost* units. ``run_open_loop``
+    ticks it by the number of compiled dispatches the scheduler step
+    issued (each decode step and each prefill chunk = 1 unit; an idle
+    wait between arrivals = 1 unit), so virtual time charges a blocking
+    prefill burst what it actually costs the device instead of hiding it
+    inside one "step". Under it every scheduling decision — admission
+    order, chunk slicing, dispatch and completion counts — is a pure
+    function of the (seeded) traffic, so the bench's count leaves can be
+    gated with exact equality across machines while wall-clock latency
+    is measured alongside."""
+
+    def __init__(self, dt: float = 1.0):
+        self.t = 0.0
+        self.dt = dt
+
+    def now(self) -> float:
+        return self.t
+
+    def tick(self, dt: Optional[float] = None) -> None:
+        self.t += self.dt if dt is None else dt * self.dt
+
+
+@dataclasses.dataclass
+class TrafficRequest:
+    arrival: float
+    prompt: List[int]
+    max_new_tokens: int
+
+
+def synth_traffic(n: int, rate: float, *, seed: int, vocab_size: int,
+                  prompt_len=(8, 48), out_len=(4, 16)) -> List[TrafficRequest]:
+    """Seeded open-loop Poisson traffic: exponential inter-arrivals at
+    ``rate`` requests per policy-time unit, uniform prompt/output length
+    distributions (inclusive bounds), uniform random token ids.
+
+    The arrival *pattern* is rate-invariant: unit-rate gaps are drawn
+    first and scaled by ``1/rate``, so sweeping ``rate`` offers the same
+    request sequence faster or slower — goodput curves across rates are
+    then directly comparable."""
+    rng = np.random.RandomState(seed)
+    arrivals = np.cumsum(rng.exponential(1.0, size=n)) / rate
+    plens = rng.randint(prompt_len[0], prompt_len[1] + 1, size=n)
+    olens = rng.randint(out_len[0], out_len[1] + 1, size=n)
+    return [
+        TrafficRequest(
+            arrival=float(arrivals[i]),
+            prompt=[int(t) for t in
+                    rng.randint(1, vocab_size, size=int(plens[i]))],
+            max_new_tokens=int(olens[i]))
+        for i in range(n)
+    ]
+
+
+def run_open_loop(sched: Scheduler, traffic: Sequence[TrafficRequest], *,
+                  tick: Optional[Callable[[float], None]] = None,
+                  max_steps: int = 200_000,
+                  key: Optional[jax.Array] = None) -> int:
+    """Drive ``sched`` through an open-loop arrival trace until every
+    request finishes: release arrivals whose time has come, step, tick
+    the virtual clock (or sleep briefly on a wall clock while idle).
+
+    ``tick`` (typically ``StepClock.tick``) receives the step's
+    dispatch cost — the number of compiled dispatches (prefill chunks +
+    decode) the step issued, minimum 1 — so virtual time is charged per
+    unit of device work, not per scheduler iteration; an idle wait
+    between arrivals costs 1. Returns the number of scheduler steps
+    taken."""
+    i, steps = 0, 0
+    while True:
+        now = sched.clock()
+        while i < len(traffic) and traffic[i].arrival <= now:
+            t = traffic[i]
+            sched.submit(t.prompt, t.max_new_tokens, arrival=t.arrival)
+            i += 1
+        if i >= len(traffic) and sched.idle():
+            return steps
+        if sched.idle():
+            # between arrivals: advance time without burning dispatches
+            if tick is not None:
+                tick(1.0)
+            else:
+                time.sleep(1e-4)
+            continue
+        key, sub = ((None, None) if key is None
+                    else jax.random.split(key))
+        before = (sched.engine.stats["prefill_dispatches"],
+                  sched.engine.stats["decode_steps"])
+        sched.step(sub)
+        after = (sched.engine.stats["prefill_dispatches"],
+                 sched.engine.stats["decode_steps"])
+        steps += 1
+        if tick is not None:
+            tick(max(1.0, float(sum(after) - sum(before))))
+        if steps >= max_steps:
+            raise RuntimeError(
+                f"open-loop run exceeded {max_steps} steps with "
+                f"{len(sched.waiting)} waiting / {len(sched.running)} "
+                "running — traffic does not drain")

@@ -71,3 +71,50 @@ def test_extra_transfer_is_detected():
     eng.add_request([3, 1, 4])
     with pytest.raises(InvariantViolation, match="transfers"):
         eng.step()
+
+
+def test_scheduler_invariants_clean():
+    """The scheduler-layer drive (interleaved budgeted prefill over
+    Poisson traffic) upholds the same compile/transfer budget: one decode
+    executable, each bucket executable traced once, one fetch per
+    admission + per decode step."""
+    from repro.analysis.invariants import run_scheduler_invariants
+
+    out = run_scheduler_invariants(configs=("qwen2-1.5b",))
+    assert out["violations"] == 0 and out["failed"] == []
+    rep = out["configs"]["qwen2-1.5b"]
+    assert rep["completed"] == 5
+    # budget 10 slices long prompts into a bucket-16 chunk + bucket-8
+    # remainder: exactly two prefill executables, one trace each
+    assert rep["prefill_executables"] == 2
+    assert rep["compiles"] == 3                    # 2 prefill + 1 decode
+    assert rep["fetches"] == rep["steps"] + 5      # no hidden transfers
+
+
+def test_scheduler_extra_transfer_is_detected():
+    """The injected second host crossing must still be caught when the
+    decode step is issued by the continuous-batching scheduler rather
+    than a hand-placed ``Engine.step`` call."""
+    from repro.serving.scheduler import Scheduler, SchedulerConfig, StepClock
+
+    class TwoFetchEngine(InstrumentedEngine):
+        def _compiled_decode(self, sample):
+            fn = super()._compiled_decode(sample)
+
+            def wrapped(*a, **kw):
+                ids, cache = fn(*a, **kw)
+                self._fetch(ids)             # the regression under test
+                return ids, cache
+
+            return wrapped
+
+    arch, params, cfg = _engine(batch_slots=1, max_ctx=32)
+    clock = StepClock()
+    sched = Scheduler(TwoFetchEngine(arch, params, cfg),
+                      SchedulerConfig(prefill_token_budget=None),
+                      clock=clock.now)
+    sched.submit([3, 1, 4], max_new_tokens=4, arrival=0.0)
+    with pytest.raises(InvariantViolation, match="transfers"):
+        for _ in range(8):
+            sched.step()
+            clock.tick()

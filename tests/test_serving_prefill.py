@@ -160,7 +160,8 @@ def test_temperature_sampling_on_device():
     def gen(seed):
         eng = Engine(arch, params, ServeConfig(batch_slots=1, max_ctx=64,
                                                temperature=0.8))
-        eng.add_request([5, 6, 7])
+        # keyless add_request under temperature > 0 would warn + argmax
+        eng.add_request([5, 6, 7], key=jax.random.PRNGKey(seed + 7))
         return [eng.step(jax.random.PRNGKey(seed + i))[0] for i in range(6)]
 
     a, b, c = gen(0), gen(0), gen(100)

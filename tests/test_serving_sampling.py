@@ -1,0 +1,100 @@
+"""Sampling contract at the prefill seam: ``temperature > 0`` samples
+only when a PRNG key is passed; ``temperature > 0`` WITHOUT a key warns
+(``UserWarning``) and falls back to greedy argmax — the explicit form of
+what used to happen silently (the first token's logits never saw the
+temperature path without a key, so callers believed they were sampling
+and got argmax)."""
+import warnings
+
+import jax
+import pytest
+
+from repro.configs import get_config
+from repro.models import init_params
+from repro.serving.engine import Engine, ServeConfig
+from repro.serving.scheduler import Scheduler, SchedulerConfig, StepClock
+
+_CACHE = {}
+
+
+def _engine(temperature, slots=1, ctx=32):
+    if "ap" not in _CACHE:
+        arch = get_config("qwen2-1.5b").reduced()
+        _CACHE["ap"] = (arch, init_params(jax.random.PRNGKey(0), arch))
+    arch, params = _CACHE["ap"]
+    return Engine(arch, params,
+                  ServeConfig(batch_slots=slots, max_ctx=ctx,
+                              temperature=temperature))
+
+PROMPT = [3, 1, 4, 1, 5]
+
+
+def test_temperature_with_key_samples_without_warning():
+    """temp > 0 + key: the sampled path runs silently and is reproducible
+    under the same key."""
+    firsts = []
+    for _ in range(2):
+        eng = _engine(temperature=1.0)
+        with warnings.catch_warnings():
+            warnings.simplefilter("error")   # any warning fails the test
+            slot = eng.add_request(PROMPT, key=jax.random.PRNGKey(7))
+        firsts.append(eng.tokens[slot][-1])
+    assert firsts[0] == firsts[1]
+
+
+def test_temperature_without_key_warns_and_is_greedy():
+    """temp > 0, no key: a UserWarning fires and the emitted token equals
+    the greedy (temperature=0) engine's — documented fallback, not a
+    silent one."""
+    eng_t = _engine(temperature=1.0)
+    with pytest.warns(UserWarning, match="falling back to greedy"):
+        slot = eng_t.add_request(PROMPT)
+    eng_g = _engine(temperature=0.0)
+    with warnings.catch_warnings():
+        warnings.simplefilter("error")       # greedy path must not warn
+        slot_g = eng_g.add_request(PROMPT)
+    assert eng_t.tokens[slot][-1] == eng_g.tokens[slot_g][-1]
+
+
+def test_incremental_prefill_applies_same_contract():
+    """The scheduler's seam (``finish_prefill``) enforces the identical
+    rule: warns keyless under temperature, silent with a key."""
+    eng = _engine(temperature=0.7)
+    slot = eng.begin_request(PROMPT)
+    while eng.prefill_remaining(slot):
+        eng.advance_prefill(slot)
+    with pytest.warns(UserWarning, match="falling back to greedy"):
+        eng.finish_prefill(slot)
+
+    eng2 = _engine(temperature=0.7)
+    slot2 = eng2.begin_request(PROMPT)
+    while eng2.prefill_remaining(slot2):
+        eng2.advance_prefill(slot2)
+    with warnings.catch_warnings():
+        warnings.simplefilter("error")
+        eng2.finish_prefill(slot2, key=jax.random.PRNGKey(3))
+
+
+def test_scheduler_threads_keys_per_request():
+    """Scheduler.step(key=...) folds a per-request sub-key into every
+    finish_prefill, so a temperature engine under the scheduler samples
+    without warnings and reproducibly."""
+    def run():
+        clock = StepClock()
+        eng = _engine(temperature=1.0, slots=2)
+        sched = Scheduler(eng, SchedulerConfig(), clock=clock.now)
+        rs = [sched.submit(PROMPT, max_new_tokens=4, arrival=0.0)
+              for _ in range(2)]
+        key = jax.random.PRNGKey(11)
+        with warnings.catch_warnings():
+            warnings.simplefilter("error")
+            steps = 0
+            while not sched.idle():
+                key, sub = jax.random.split(key)
+                sched.step(sub)
+                clock.tick()
+                steps += 1
+                assert steps < 100
+        return [r.generated for r in rs]
+
+    assert run() == run()
