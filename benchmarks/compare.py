@@ -30,6 +30,17 @@ path:
   wall-clock latency percentiles (``ttft_p50_ms`` / ``ttft_p99_ms`` /
   ``tpot_p50_ms`` / ``tpot_p99_ms`` / ``goodput_tok_s``) get the usual
   ratio + noise-floor gates.
+* the goodput_bench drill counters (``faults_injected`` /
+  ``faults_detected`` / ``ckpt_local`` / ``ckpt_durable`` /
+  ``steps_recomputed`` / ``restore_local`` / ``restore_durable`` /
+  ``final_step`` / ``dp_width_final`` /
+  ``trajectory_bit_identical`` ...) — **exact**: faults fire at
+  scheduled steps of a deterministic loop, fleet detection runs on a
+  virtual clock, and the async checkpoint writer drains at each fault
+  boundary, so every counter is a pure function of (arch, plan,
+  config); drift means the resilience policy changed without the record
+  being refreshed. The drill's ``goodput_pct`` is wall-clock-derived
+  and gets the ratio gate.
 * the ``--bench audit`` leaves (``experiments/audit/audit_report.json``,
   see ``src/repro/analysis``) — **exact**: jaxpr MAC counts, ledger
   cross-check totals, and engine compile/transfer counters are structural
@@ -70,7 +81,10 @@ _TIME_KEYS = {"warm_us": False, "ttft_ms": False, "decode_tok_s": True,
               # traffic_bench wall-clock latency percentiles + goodput
               "ttft_p50_ms": False, "ttft_p99_ms": False,
               "tpot_p50_ms": False, "tpot_p99_ms": False,
-              "goodput_tok_s": True}
+              "goodput_tok_s": True,
+              # goodput_bench: the drill's productive fraction of wall
+              # clock — wall-derived, so ratio-gated, not exact
+              "goodput_pct": True}
 # deterministic leaves compared with exact equality (op-count drift gate +
 # e2e_pareto frontier-membership gate + the static-analysis audit report —
 # every audit leaf is a structural count over jaxpr traces, so any drift
@@ -92,14 +106,25 @@ _EXACT_KEYS = ("ops_per_token", "analog_ops_per_token", "on_front",
                "sched_steps", "decode_steps", "prefill_dispatches",
                "queue_depth_max", "generated_tokens", "goodput_tokens",
                "knee_rate_frac", "beats_static_above_capacity",
-               "prefill_executables")
+               "prefill_executables",
+               # goodput_bench drill counters: faults fire at scheduled
+               # steps, detection runs on a virtual fleet clock, and the
+               # async writer drains at fault boundaries — every counter
+               # is a pure function of (arch, plan, config), so any drift
+               # means the resilience *policy* changed
+               "final_step", "attempts", "faults_injected",
+               "faults_detected", "fault_kill", "fault_device_loss",
+               "fault_straggler", "steps_recomputed", "ckpt_local",
+               "ckpt_durable", "restore_local", "restore_durable",
+               "remesh_events", "dp_width_initial", "dp_width_final",
+               "trajectory_bit_identical", "step", "severity")
 # committed-value scale to microseconds, for the noise floor
 _TO_US = {"warm_us": 1.0, "ttft_ms": 1e3, "ttft_p50_ms": 1e3,
           "ttft_p99_ms": 1e3, "tpot_p50_ms": 1e3, "tpot_p99_ms": 1e3}
 
 # "audit" is gated by its own CI lane (which writes the report first and
 # compares with --no-run), so it is not in the default bench set.
-_BENCHES = ("kernel", "serve", "energy", "pareto", "traffic")
+_BENCHES = ("kernel", "serve", "energy", "pareto", "traffic", "goodput")
 
 # records that don't live under experiments/bench/
 _REL_OVERRIDE = {"audit_report": "experiments/audit/audit_report.json"}
@@ -218,6 +243,9 @@ def _fresh_run(bench: str):
     if bench == "traffic":
         from benchmarks import traffic_bench
         return traffic_bench.run(**traffic_bench.SMOKE_PARAMS)
+    if bench == "goodput":
+        from benchmarks import goodput_bench
+        return goodput_bench.run(**goodput_bench.SMOKE_PARAMS)
     from benchmarks import serve_bench
     return serve_bench.run(**serve_bench.SMOKE_PARAMS)
 
@@ -234,7 +262,8 @@ def run(benches=_BENCHES, threshold=1.5, min_us=300.0, fresh=True) -> list:
     regressions = []
     names = {"kernel": "kernel_bench_smoke", "serve": "serve_bench_smoke",
              "energy": "e2e_energy_smoke", "pareto": "e2e_pareto_smoke",
-             "traffic": "traffic_bench_smoke", "audit": "audit_report"}
+             "traffic": "traffic_bench_smoke",
+             "goodput": "goodput_bench_smoke", "audit": "audit_report"}
     for bench in benches:
         name = names[bench]
         committed = _committed(name)
@@ -257,8 +286,10 @@ def main() -> None:
                     help="warm-time ratio above which a cell is a regression")
     ap.add_argument("--min-us", type=float, default=300.0,
                     help="skip committed cells faster than this (noise floor)")
-    ap.add_argument("--bench", default="kernel,serve,energy,pareto,traffic",
-                    help="comma list: kernel,serve,energy,pareto,traffic,audit "
+    ap.add_argument("--bench",
+                    default="kernel,serve,energy,pareto,traffic,goodput",
+                    help="comma list: kernel,serve,energy,pareto,traffic,"
+                         "goodput,audit "
                          "(audit gates experiments/audit/audit_report.json "
                          "exactly; its CI lane runs the CLI then this with "
                          "--no-run)")

@@ -72,7 +72,8 @@ RATE_FRACS = (0.25, 0.5, 1.0, 2.0, 4.0)
 
 SMOKE_PARAMS = dict(n_requests=10, slots=2, ctx=64, prompt_len=(4, 12),
                     out_len=(2, 12), budget=8, slo_ttft=40.0,
-                    rate_fracs=(0.5, 1.0, 2.5), record="traffic_bench_smoke")
+                    preempt_age=40.0, rate_fracs=(0.5, 1.0, 2.5),
+                    record="traffic_bench_smoke")
 
 
 def _capacity_est(slots, out_len) -> float:
@@ -108,7 +109,7 @@ def _warm(arch, params, slots, ctx, prompt_len, budget):
 
 
 def bench_arch(name, *, n_requests, slots, ctx, prompt_len, out_len,
-               budget, slo_ttft, rate_fracs, seed=0):
+               budget, slo_ttft, preempt_age, rate_fracs, seed=0):
     arch = get_config(name).reduced()
     params = init_params(jax.random.PRNGKey(0), arch)
     _warm(arch, params, slots, ctx, prompt_len, budget)
@@ -126,8 +127,17 @@ def bench_arch(name, *, n_requests, slots, ctx, prompt_len, out_len,
         cell = {"rate_req_per_step": rate,
                 "offered_tok_per_step": offered}
         for mode, make in (
+                # preempt_age at the TTFT SLO: a queue-head request aging
+                # past it evicts the youngest running request (LIFO
+                # victim), so preemption shows up in the goodput curves
+                # above capacity — the ``preempted`` count is exact-gated
+                # like the rest of the scheduling counters. Tighter ages
+                # thrash under sustained overload (victim recompute beats
+                # the rescued request's odds of still making its SLO) and
+                # hand the goodput win back to static batching
                 ("scheduler", lambda e, c: Scheduler(
-                    e, SchedulerConfig(prefill_token_budget=budget),
+                    e, SchedulerConfig(prefill_token_budget=budget,
+                                       preempt_age=preempt_age),
                     clock=c.now)),
                 ("static", lambda e, c: StaticBatchScheduler(
                     e, clock=c.now))):
@@ -176,8 +186,8 @@ def bench_arch(name, *, n_requests, slots, ctx, prompt_len, out_len,
 
 
 def run(n_requests=32, slots=4, ctx=256, prompt_len=(8, 48),
-        out_len=(4, 32), budget=16, slo_ttft=80.0, rate_fracs=RATE_FRACS,
-        archs=None, record="traffic_bench", seed=0):
+        out_len=(4, 32), budget=16, slo_ttft=80.0, preempt_age=80.0,
+        rate_fracs=RATE_FRACS, archs=None, record="traffic_bench", seed=0):
     from repro.analysis.invariants import run_scheduler_invariants
 
     out = {
@@ -185,6 +195,7 @@ def run(n_requests=32, slots=4, ctx=256, prompt_len=(8, 48),
                    "prompt_len": list(prompt_len),
                    "out_len": list(out_len), "budget": budget,
                    "slo_ttft_steps": slo_ttft,
+                   "preempt_age_steps": preempt_age,
                    "rate_fracs": list(rate_fracs), "seed": seed},
         "archs": {},
     }
@@ -194,7 +205,8 @@ def run(n_requests=32, slots=4, ctx=256, prompt_len=(8, 48),
             **bench_arch(name, n_requests=n_requests, slots=slots, ctx=ctx,
                          prompt_len=prompt_len, out_len=out_len,
                          budget=budget, slo_ttft=slo_ttft,
-                         rate_fracs=rate_fracs, seed=seed)}
+                         preempt_age=preempt_age, rate_fracs=rate_fracs,
+                         seed=seed)}
     # the compile-budget / one-transfer invariants, proven under the
     # instrumented scheduler, in the same record the latency comes from
     out["invariants"] = run_scheduler_invariants(("qwen2-1.5b",))
@@ -228,6 +240,9 @@ if __name__ == "__main__":
                     help="prefill token budget per scheduler step")
     ap.add_argument("--slo-ttft", type=float, default=80.0,
                     help="TTFT SLO in virtual dispatch-units")
+    ap.add_argument("--preempt-age", type=float, default=80.0,
+                    help="queue-head age (virtual units) that triggers "
+                         "LIFO preemption of a running request")
     ap.add_argument("--smoke", action="store_true",
                     help="tiny sizes for the CI bench lane")
     args = ap.parse_args()
@@ -237,4 +252,5 @@ if __name__ == "__main__":
         run(**SMOKE_PARAMS)
     else:
         run(n_requests=args.requests, slots=args.slots, ctx=args.ctx,
-            budget=args.budget, slo_ttft=args.slo_ttft)
+            budget=args.budget, slo_ttft=args.slo_ttft,
+            preempt_age=args.preempt_age)

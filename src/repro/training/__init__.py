@@ -1,0 +1,95 @@
+"""Training stack: optimizer, distributed train step, and the resilience
+loop that keeps a fleet's wall clock productive.
+
+Five modules, one seam
+----------------------
+* ``optimizer``  — AdamW / Adafactor with schedule, plus int8
+  error-feedback gradient compression for the DP all-reduce.
+* ``trainer``    — ``make_train_step`` (microbatch ``lax.scan``
+  accumulation, f32 grad accumulation) and the resilient ``train``
+  driver (restore-or-init, heartbeats, async checkpoints).
+* ``checkpoint`` — atomic, content-verified checkpoints and the
+  two-tier ``AsyncCheckpointer``. **Tiers**: *local* (node-local SSD —
+  fast, written every k steps, lost with the node) and *durable*
+  (object store / NFS — slower, every K steps, survives node loss).
+  Writes are tmp-dir + atomic-rename with a sha256 leaf manifest, done
+  by a background thread off a host snapshot, so a crash can never
+  publish a torn step and the training thread only pays the
+  ``device_get``. Restore walks tiers freshest-first and falls back
+  past corrupt steps with a UserWarning.
+* ``fault``      — detection and planning primitives. **Fault
+  taxonomy** (``FAULT_KINDS``): *kill* (process dies, node survives —
+  local tier available), *device_loss* (chips and their node-local
+  tier gone — durable restore + ``plan_remesh`` shrinks the DP width,
+  ``reshard_tree`` places the state), *straggler* (step time degrades
+  ``severity``× — detected against the fleet median, no restart).
+  ``FaultPlan`` is the injection side: a seeded, step-ordered schedule.
+* ``supervisor`` — the closed loop. Runs training under a
+  ``FaultPlan``: inject → detect (``HeartbeatBoard`` +
+  ``detect_failures`` / ``detect_stragglers``) → restore from the
+  freshest tier → (elastic) resume, with every wall second bucketed.
+
+GoodPut definitions
+-------------------
+``GoodPutLedger`` partitions wall time — each instant belongs to
+exactly one bucket: *productive* (first-time steps — the only GoodPut),
+*recompute* (re-running steps lost to a restart), *checkpoint_stall*
+(training-thread snapshot+enqueue and fault-boundary drains),
+*detection*, *recovery* (restore + re-shard), *overhead*.
+``goodput_pct = 100 × productive / wall``; bucket times provably sum to
+the wall clock. ``price_drill`` prices the BadPut through the
+CostLedger: pJ-per-useful-token = pJ/token × tokens_computed /
+tokens_useful.
+
+Drill determinism
+-----------------
+Faults fire at scheduled steps of a deterministic loop; the simulated
+fleet heartbeats on a virtual clock (1.0 per step) so detection takes a
+machine-independent number of rounds; the async writer drains at every
+fault boundary so per-tier checkpoint counts cannot race the fault.
+Every drill counter is therefore a pure function of (arch, plan,
+config) — ``benchmarks/goodput_bench.py`` exact-gates them in CI. The
+(seed, step)-pure data pipeline plus the exact host roundtrip of the
+checkpoint format make the resumed loss trajectory *bit-identical* to
+an uninterrupted run, asserted inline on every recomputed step.
+
+Benchmarks: ``benchmarks/goodput_bench.py`` (supervised fault drill:
+GoodPut %, detection/recovery counters, pJ-per-useful-token).
+Tests: ``tests/test_supervisor.py`` (torn-checkpoint crash drills,
+ledger partition property, drill end-to-end), ``tests/test_training.py``.
+"""
+from repro.training.checkpoint import (
+    AsyncCheckpointer,
+    latest_step,
+    restore_checkpoint,
+    save_checkpoint,
+)
+from repro.training.fault import (
+    FAULT_KINDS,
+    FaultEvent,
+    FaultPlan,
+    HeartbeatBoard,
+    detect_failures,
+    detect_stragglers,
+    make_fault_plan,
+    plan_remesh,
+)
+from repro.training.optimizer import OptimizerConfig
+from repro.training.supervisor import (
+    DrillConfig,
+    GoodPutLedger,
+    Supervisor,
+    price_drill,
+)
+from repro.training.trainer import TrainConfig, make_train_step, train
+
+__all__ = [
+    "AsyncCheckpointer", "latest_step", "restore_checkpoint",
+    "save_checkpoint",
+    "FAULT_KINDS", "FaultEvent", "FaultPlan", "HeartbeatBoard",
+    "detect_failures", "detect_stragglers", "make_fault_plan",
+    "plan_remesh",
+    "OptimizerConfig",
+    "DrillConfig", "GoodPutLedger", "Supervisor", "price_drill",
+    "TrainConfig", "make_train_step", "train",
+]

@@ -1,4 +1,4 @@
-"""Fault-tolerant checkpointing: atomic, content-verified, resumable.
+"""Fault-tolerant checkpointing: atomic, content-verified, two-tier, async.
 
 Layout (one directory per step):
 
@@ -8,23 +8,48 @@ Layout (one directory per step):
         arr_000.npy ...            one file per pytree leaf
 
 Restore picks the newest *complete* step (meta.json present and every leaf
-hash verifies), so a crash mid-write can never be loaded. ``keep`` bounds
-disk. Multi-host: each host writes only the shards it owns
+hash verifies), so a crash mid-write can never be loaded; a published step
+that later fails hash or leaf-presence verification (bit rot, a lost leaf
+file) is *skipped with a UserWarning* and restore falls back to the
+next-newest valid step instead of hard-failing the whole job. ``keep``
+bounds disk. Multi-host: each host writes only the shards it owns
 (``process_index`` prefix) — on this single-process container that
 degenerates to one writer, but the path layout is the multi-host one.
+
+Two-tier async writes
+---------------------
+``AsyncCheckpointer`` is the production writer: a **local** tier (fast
+medium, written every ``local_every`` steps, tight retention — the
+node-local SSD of a real deployment, lost with the node) and a
+**durable** tier (slower medium, every ``durable_every`` steps — object
+store / NFS, survives node loss). ``maybe_save`` snapshots the tree on
+the calling (training) thread — a single batched ``jax.device_get`` plus
+an enqueue, the only part that stalls training, accumulated in
+``stats["stall_s"]`` — and one background worker thread does the file
+writes and the atomic rename, so training proceeds while bytes land on
+disk. ``restore`` walks the tiers freshest-step-first (local wins ties),
+reusing the per-directory fallback, so a torn or invalidated local tier
+degrades to the durable one instead of failing.
 """
 from __future__ import annotations
 
 import hashlib
 import json
 import os
+import queue
 import shutil
-from typing import Any, Optional, Tuple
+import threading
+import time
+import warnings
+from typing import Any, List, Optional, Tuple
 
 import jax
 import numpy as np
 
-__all__ = ["save_checkpoint", "restore_checkpoint", "latest_step"]
+__all__ = [
+    "save_checkpoint", "restore_checkpoint", "latest_step",
+    "snapshot_tree", "write_snapshot", "AsyncCheckpointer",
+]
 
 
 def _leaf_paths(tree) -> list:
@@ -35,7 +60,23 @@ def _leaf_paths(tree) -> list:
     ]
 
 
-def save_checkpoint(directory: str, step: int, tree: Any, keep: int = 3) -> str:
+def snapshot_tree(tree: Any) -> List[Tuple[str, np.ndarray]]:
+    """Host-side snapshot of a (possibly device-resident) pytree: one
+    batched ``device_get``. This is the only part of a save that must run
+    on the training thread — the returned (path, ndarray) list is
+    immutable w.r.t. further training steps and safe to write from a
+    background thread."""
+    paths = _leaf_paths(tree)
+    host = jax.device_get([leaf for _, leaf in paths])
+    return [(p, np.asarray(a)) for (p, _), a in zip(paths, host)]
+
+
+def write_snapshot(directory: str, step: int,
+                   snapshot: List[Tuple[str, np.ndarray]],
+                   keep: int = 3) -> str:
+    """Write an already-host-resident snapshot: tmp dir, per-leaf files +
+    sha256 manifest, meta.json, then one atomic rename publishes the
+    step. Safe to call off-thread; touches no jax state."""
     os.makedirs(directory, exist_ok=True)
     name = f"step_{step:09d}"
     tmp = os.path.join(directory, name + f".tmp{jax.process_index()}")
@@ -45,8 +86,7 @@ def save_checkpoint(directory: str, step: int, tree: Any, keep: int = 3) -> str:
     os.makedirs(tmp)
 
     manifest = {}
-    for i, (path, leaf) in enumerate(_leaf_paths(tree)):
-        arr = np.asarray(jax.device_get(leaf))
+    for i, (path, arr) in enumerate(snapshot):
         fn = f"arr_{i:05d}.npy"
         np.save(os.path.join(tmp, fn), arr, allow_pickle=False)
         with open(os.path.join(tmp, fn), "rb") as f:
@@ -66,30 +106,55 @@ def save_checkpoint(directory: str, step: int, tree: Any, keep: int = 3) -> str:
     return final
 
 
+def save_checkpoint(directory: str, step: int, tree: Any, keep: int = 3) -> str:
+    """Blocking save: snapshot on the caller, write, publish."""
+    return write_snapshot(directory, step, snapshot_tree(tree), keep)
+
+
 def _complete_steps(directory: str) -> list:
     out = []
     for d in os.listdir(directory):
-        if d.startswith("step_") and not ".tmp" in d:
+        if d.startswith("step_") and ".tmp" not in d:
             if os.path.exists(os.path.join(directory, d, "meta.json")):
                 out.append(int(d.split("_")[1]))
     return out
 
 
-def latest_step(directory: str) -> Optional[int]:
+def _verify_step(directory: str, step: int) -> None:
+    """Raise if the published step's manifest or any leaf file fails
+    presence/hash verification."""
+    d = os.path.join(directory, f"step_{step:09d}")
+    with open(os.path.join(d, "meta.json")) as f:
+        meta = json.load(f)
+    for key, ent in meta["leaves"].items():
+        fp = os.path.join(d, ent["file"])
+        with open(fp, "rb") as f:
+            if hashlib.sha256(f.read()).hexdigest() != ent["sha256"]:
+                raise IOError(f"checkpoint corruption at {key} ({fp})")
+
+
+def latest_step(directory: str, *, verify: bool = False) -> Optional[int]:
+    """Newest complete step, or None. ``verify=True`` additionally
+    hash-verifies candidates newest-first and returns the first that
+    passes, warning (UserWarning) for each corrupt step it skips."""
     if not os.path.isdir(directory):
         return None
-    steps = _complete_steps(directory)
-    return max(steps) if steps else None
+    steps = sorted(_complete_steps(directory), reverse=True)
+    if not verify:
+        return steps[0] if steps else None
+    for s in steps:
+        try:
+            _verify_step(directory, s)
+            return s
+        except (OSError, KeyError, json.JSONDecodeError) as e:
+            warnings.warn(
+                f"skipping corrupt checkpoint step {s} under {directory}: "
+                f"{e}", UserWarning, stacklevel=2)
+    return None
 
 
-def restore_checkpoint(
-    directory: str, template: Any, step: Optional[int] = None,
-    verify: bool = True,
-) -> Tuple[Any, int]:
-    """Restore into the structure of ``template`` (shapes must match)."""
-    step = latest_step(directory) if step is None else step
-    if step is None:
-        raise FileNotFoundError(f"no complete checkpoint under {directory}")
+def _restore_step(directory: str, template: Any, step: int,
+                  verify: bool) -> Tuple[Any, int]:
     d = os.path.join(directory, f"step_{step:09d}")
     with open(os.path.join(d, "meta.json")) as f:
         meta = json.load(f)
@@ -98,7 +163,7 @@ def restore_checkpoint(
     leaves = []
     for path, tmpl in flat:
         key = "/".join(str(getattr(k, "key", k)) for k in path)
-        ent = meta["leaves"][key]
+        ent = meta["leaves"][key]          # KeyError -> leaf missing
         fp = os.path.join(d, ent["file"])
         if verify:
             with open(fp, "rb") as f:
@@ -112,3 +177,176 @@ def restore_checkpoint(
         leaves.append(arr)
     tree = jax.tree_util.tree_unflatten(treedef, leaves)
     return tree, meta["step"]
+
+
+def restore_checkpoint(
+    directory: str, template: Any, step: Optional[int] = None,
+    verify: bool = True,
+) -> Tuple[Any, int]:
+    """Restore into the structure of ``template`` (shapes must match).
+
+    With ``step=None`` (the resume path), candidates are tried
+    newest-first: a step that fails hash or leaf-presence verification is
+    skipped with a UserWarning naming it and the next-newest complete
+    step is tried, so one corrupt checkpoint can never strand a job that
+    has an older valid one. An explicit ``step`` is a hard requirement
+    and still fails loudly. Shape mismatches always propagate — they mean
+    an elastic re-shard is needed, not corruption."""
+    if step is not None:
+        return _restore_step(directory, template, step, verify)
+    if not os.path.isdir(directory):
+        raise FileNotFoundError(f"no complete checkpoint under {directory}")
+    steps = sorted(_complete_steps(directory), reverse=True)
+    if not steps:
+        raise FileNotFoundError(f"no complete checkpoint under {directory}")
+    errors = []
+    for s in steps:
+        try:
+            return _restore_step(directory, template, s, verify)
+        except ValueError:
+            raise  # shape mismatch: elastic problem, not corruption
+        except (OSError, KeyError, json.JSONDecodeError) as e:
+            errors.append((s, e))
+            warnings.warn(
+                f"checkpoint step {s} under {directory} failed "
+                f"verification ({e}); falling back to the next-newest "
+                "complete step", UserWarning, stacklevel=2)
+    raise IOError(
+        f"every checkpoint under {directory} failed verification: "
+        + "; ".join(f"step {s}: {e}" for s, e in errors))
+
+
+# ------------------------------------------------------------- async tiers
+class AsyncCheckpointer:
+    """Two-tier asynchronous checkpoint writer (see module docstring).
+
+    ``stats`` counts *scheduled* saves per tier (deterministic under a
+    deterministic step schedule — the goodput bench exact-gates them) and
+    accumulates ``stall_s``, the training-thread time spent inside
+    snapshot+enqueue. Worker-side write failures never raise into the
+    training loop: they are collected in ``errors`` and the torn step is
+    simply absent from restore's candidate set (the atomic-rename
+    protocol guarantees a failed write publishes nothing)."""
+
+    #: restore preference order on equal steps (local is the fast medium)
+    TIERS = ("local", "durable")
+
+    def __init__(self, durable_dir: str, local_dir: Optional[str] = None, *,
+                 durable_every: int = 50, local_every: int = 10,
+                 keep_durable: int = 3, keep_local: int = 2):
+        self.dirs = {"durable": durable_dir}
+        if local_dir is not None:
+            self.dirs["local"] = local_dir
+        self.every = {"durable": durable_every, "local": local_every}
+        self.keep = {"durable": keep_durable, "local": keep_local}
+        self.stats = {"local": 0, "durable": 0, "stall_s": 0.0}
+        self.errors: List[Exception] = []
+        self._q: "queue.Queue" = queue.Queue()
+        self._worker = threading.Thread(
+            target=self._run, name="ckpt-writer", daemon=True)
+        self._worker.start()
+        self._closed = False
+
+    # --------------------------------------------------------- worker side
+    def _run(self) -> None:
+        while True:
+            item = self._q.get()
+            try:
+                if item is None:
+                    return
+                directory, step, snap, keep = item
+                write_snapshot(directory, step, snap, keep)
+            except Exception as e:  # noqa: BLE001 — surfaced via .errors
+                self.errors.append(e)
+            finally:
+                self._q.task_done()
+
+    # ------------------------------------------------------- training side
+    def save(self, step: int, tree: Any, tiers=("durable",)) -> list:
+        """Snapshot once on the calling thread, enqueue one write per
+        tier. Returns the tiers scheduled."""
+        if self._closed:
+            raise RuntimeError("AsyncCheckpointer is closed")
+        tiers = [t for t in tiers if t in self.dirs]
+        if not tiers:
+            return []
+        t0 = time.perf_counter()
+        snap = snapshot_tree(tree)
+        for tier in tiers:
+            self._q.put((self.dirs[tier], step, snap, self.keep[tier]))
+            self.stats[tier] += 1
+        self.stats["stall_s"] += time.perf_counter() - t0
+        return tiers
+
+    def maybe_save(self, step: int, tree: Any) -> list:
+        """Tier-cadence save: local every ``local_every`` steps, durable
+        every ``durable_every`` (a step due in both tiers snapshots
+        once)."""
+        due = [t for t in ("local", "durable")
+               if t in self.dirs and step % self.every[t] == 0]
+        return self.save(step, tree, due) if due else []
+
+    def drain(self) -> None:
+        """Block until every enqueued write has been attempted. Write
+        failures are warned about, not raised — a torn write is a lost
+        checkpoint, which restore's fallback already handles."""
+        self._q.join()
+        if self.errors:
+            warnings.warn(
+                f"{len(self.errors)} checkpoint write(s) failed "
+                f"(first: {self.errors[0]!r}); the affected steps were "
+                "never published and restore will fall back",
+                UserWarning, stacklevel=2)
+
+    def close(self) -> None:
+        if not self._closed:
+            self.drain()
+            self._closed = True
+            self._q.put(None)
+            self._worker.join()
+
+    # ------------------------------------------------------------- restore
+    def invalidate_local(self) -> None:
+        """Drop the local tier's contents (drills: node loss takes the
+        node-local SSD tier with it; only the durable tier survives)."""
+        d = self.dirs.get("local")
+        if d and os.path.isdir(d):
+            shutil.rmtree(d)
+            os.makedirs(d, exist_ok=True)
+
+    def freshest(self, *, include_local: bool = True) -> list:
+        """(tier, step) candidates, freshest step first (local wins
+        ties), for observability and restore."""
+        out = []
+        for tier in self.TIERS:
+            if tier == "local" and not include_local:
+                continue
+            d = self.dirs.get(tier)
+            if d is None:
+                continue
+            s = latest_step(d)
+            if s is not None:
+                out.append((tier, s))
+        return sorted(out, key=lambda ts: (-ts[1], self.TIERS.index(ts[0])))
+
+    def restore(self, template: Any, *,
+                include_local: bool = True) -> Tuple[Any, int, str]:
+        """Restore the freshest valid checkpoint across tiers: candidates
+        ordered freshest-first, each directory's own corrupt-step
+        fallback applies within a tier, and a tier whose every step fails
+        verification falls through to the next. Returns
+        ``(state, step, tier)``."""
+        self.drain()   # a write for step N scheduled before restore counts
+        errors = []
+        for tier, _ in self.freshest(include_local=include_local):
+            try:
+                state, step = restore_checkpoint(self.dirs[tier], template)
+                return state, step, tier
+            except (OSError, KeyError, json.JSONDecodeError) as e:
+                errors.append((tier, e))
+                warnings.warn(
+                    f"checkpoint tier '{tier}' unusable ({e}); falling "
+                    "back to the next tier", UserWarning, stacklevel=2)
+        raise FileNotFoundError(
+            "no restorable checkpoint in any tier"
+            + (f" ({errors})" if errors else ""))

@@ -12,6 +12,12 @@ feasible size, re-shard the latest checkpoint onto the surviving mesh, and
 resume from the checkpointed step (data pipeline is (seed, step)-pure, so
 no input state is lost). ``plan_remesh`` computes the new mesh;
 ``reshard_tree`` moves a host-sharded checkpoint onto it.
+
+``FaultPlan`` is the *injection* side: a deterministic schedule of faults
+(process kill, simulated device loss, injected straggler) that the drill
+supervisor (``repro.training.supervisor``) executes against a live
+training loop, so the detection/recovery machinery above is exercised by
+a reproducible scenario instead of waiting for real hardware to die.
 """
 from __future__ import annotations
 
@@ -26,6 +32,7 @@ import numpy as np
 __all__ = [
     "Heartbeat", "HeartbeatBoard", "detect_failures", "detect_stragglers",
     "plan_remesh", "reshard_tree",
+    "FAULT_KINDS", "FaultEvent", "FaultPlan", "make_fault_plan",
 ]
 
 
@@ -61,6 +68,14 @@ class HeartbeatBoard:
                 except (json.JSONDecodeError, TypeError):
                     continue  # torn write — treat as missing this round
         return out
+
+    def clear(self, host: int) -> None:
+        """Drop a host's beat file — decommissioning after node loss, so
+        a permanently dead host does not re-trigger ``detect_failures``
+        every monitoring round."""
+        path = os.path.join(self.dir, f"host_{host:05d}.json")
+        if os.path.exists(path):
+            os.remove(path)
 
 
 def detect_failures(
@@ -117,3 +132,83 @@ def reshard_tree(tree, mesh, spec_tree):
         return jax.device_put(x, NamedSharding(mesh, spec))
 
     return jax.tree.map(put, tree, spec_tree)
+
+
+# ------------------------------------------------------------ fault plans
+#: The drill fault taxonomy. "kill": the training process dies at a step
+#: boundary and restarts on the same fleet (node-local checkpoint tier
+#: survives). "device_loss": a worker host's chips drop out permanently —
+#: its node-local tier is lost with it, and the run resumes *elastically*
+#: at a smaller data-parallel width from the durable tier. "straggler": a
+#: host keeps stepping but its step time degrades by ``severity``× — no
+#: restart, detection-only (the mitigation decision is logged).
+FAULT_KINDS = ("kill", "device_loss", "straggler")
+
+
+@dataclasses.dataclass(frozen=True)
+class FaultEvent:
+    """One scheduled fault. ``step`` is the training step it fires at
+    (kill/device_loss fire *before* the step runs — that step and every
+    un-checkpointed predecessor must be recomputed; a straggler slows the
+    step itself). ``severity``: hosts lost for device_loss, slowdown
+    factor for a straggler."""
+    step: int
+    kind: str
+    severity: int = 1
+
+    def __post_init__(self):
+        if self.kind not in FAULT_KINDS:
+            raise ValueError(f"unknown fault kind {self.kind!r}; "
+                             f"one of {FAULT_KINDS}")
+        if self.step < 1:
+            raise ValueError("faults fire at step >= 1 (step 0 has no "
+                             "checkpoint to recover to but the init)")
+        if self.severity < 1:
+            raise ValueError("severity must be >= 1")
+
+
+@dataclasses.dataclass(frozen=True)
+class FaultPlan:
+    """A deterministic, step-ordered fault schedule. The drill supervisor
+    injects each event exactly once; two restart-class faults may not
+    share a step (there is nothing left to kill twice)."""
+    events: Tuple[FaultEvent, ...] = ()
+
+    def __post_init__(self):
+        object.__setattr__(self, "events", tuple(self.events))
+        steps = [e.step for e in self.events]
+        if steps != sorted(steps):
+            raise ValueError("FaultPlan events must be ordered by step")
+        if len(set(steps)) != len(steps):
+            raise ValueError("at most one fault per step")
+
+
+def make_fault_plan(seed: int, steps: int, *, n_faults: int = 3,
+                    kinds: Tuple[str, ...] = FAULT_KINDS,
+                    min_gap: int = 2) -> FaultPlan:
+    """Seeded random drill schedule: ``n_faults`` events at distinct
+    steps in [1, steps), at least ``min_gap`` apart (recovery must get a
+    chance to make forward progress between faults), cycling through
+    ``kinds`` in a seeded shuffle. Deterministic across platforms
+    (``np.random.RandomState``)."""
+    candidates = list(range(1, steps))
+    rng = np.random.RandomState(seed)
+    chosen: List[int] = []
+    rng.shuffle(candidates)
+    for s in candidates:
+        if all(abs(s - c) >= min_gap for c in chosen):
+            chosen.append(s)
+        if len(chosen) == n_faults:
+            break
+    if len(chosen) < n_faults:
+        raise ValueError(
+            f"cannot place {n_faults} faults with gap {min_gap} in "
+            f"{steps} steps")
+    kind_seq = [kinds[i % len(kinds)] for i in range(n_faults)]
+    rng.shuffle(kind_seq)
+    # a straggler below the detection factor is not a drill worth running:
+    # 4x is the canonical injected slowdown (detectable at the default
+    # factor=2 against a fleet median of nominal step times)
+    return FaultPlan(tuple(
+        FaultEvent(step=s, kind=k, severity=4 if k == "straggler" else 1)
+        for s, k in zip(sorted(chosen), kind_seq)))

@@ -40,8 +40,15 @@ __all__ = ["TrainConfig", "make_train_step", "train"]
 class TrainConfig:
     steps: int = 100
     microbatches: int = 1
+    # durable checkpoint tier (object store / NFS in production). Written
+    # asynchronously every ckpt_every steps by a background writer — the
+    # training thread only pays the device_get snapshot.
     ckpt_dir: Optional[str] = None
     ckpt_every: int = 50
+    # optional fast local tier (node-local SSD: lost with the node but
+    # cheap to write often). None disables the tier.
+    ckpt_local_dir: Optional[str] = None
+    ckpt_local_every: int = 10
     log_every: int = 10
     # GR-MAC backend override for CIM-enabled archs (None keeps the arch's
     # CIMConfig.backend; see kernels.dispatch for the choices). Training
@@ -78,18 +85,21 @@ def make_train_step(arch: ArchConfig, tcfg: TrainConfig) -> Callable:
             mbs = jax.tree.map(split, batch)
             zero = jax.tree.map(
                 lambda p: jnp.zeros(p.shape, jnp.float32), params)
+            zero_m = {"loss": jnp.zeros(()), "aux_loss": jnp.zeros(()),
+                      "total": jnp.zeros(())}
 
             def acc_fn(carry, mb):
-                g_acc, loss_acc = carry
+                g_acc, m_acc = carry
                 (_, metrics), g = jax.value_and_grad(
                     loss_fn, has_aux=True)(params, mb)
                 g_acc = jax.tree.map(
                     lambda a, b_: a + b_.astype(jnp.float32) / nmb, g_acc, g)
-                return (g_acc, loss_acc + metrics["loss"] / nmb), None
+                # accumulate the WHOLE metrics dict: MoE aux losses must
+                # survive microbatching, not read as 0 in the logs
+                m_acc = jax.tree.map(lambda a, m: a + m / nmb, m_acc, metrics)
+                return (g_acc, m_acc), None
 
-            (grads, loss), _ = jax.lax.scan(
-                acc_fn, (zero, jnp.zeros((), jnp.float32)), mbs)
-            metrics = {"loss": loss, "aux_loss": jnp.zeros(()), "total": loss}
+            (grads, metrics), _ = jax.lax.scan(acc_fn, (zero, zero_m), mbs)
 
         if ocfg.grad_compression:
             q, scales, err = compress_grads(grads, opt_state["err"])
@@ -112,37 +122,54 @@ def train(
     heartbeat_dir: Optional[str] = None,
     jit_kwargs: Optional[dict] = None,
 ) -> dict:
-    """Run (or resume) training; returns final metrics."""
+    """Run (or resume) training; returns final metrics.
+
+    Checkpointing is asynchronous and (optionally) two-tier: a background
+    writer thread publishes atomic snapshots while training proceeds —
+    the loop only pays the host snapshot (see
+    ``checkpoint.AsyncCheckpointer``). Resume picks the freshest valid
+    step across tiers, falling back past corrupt ones."""
     params = init_params(jax.random.PRNGKey(seed), arch)
     opt_state = init_opt_state(params, tcfg.opt)
     start_step = 0
 
-    if tcfg.ckpt_dir and ckpt.latest_step(tcfg.ckpt_dir) is not None:
-        state, start_step = ckpt.restore_checkpoint(
-            tcfg.ckpt_dir, {"params": params, "opt": opt_state})
-        params, opt_state = state["params"], state["opt"]
-        print(f"[train] resumed from step {start_step}")
+    writer = None
+    if tcfg.ckpt_dir:
+        writer = ckpt.AsyncCheckpointer(
+            tcfg.ckpt_dir, tcfg.ckpt_local_dir,
+            durable_every=tcfg.ckpt_every,
+            local_every=tcfg.ckpt_local_every)
+        try:
+            state, start_step, tier = writer.restore(
+                {"params": params, "opt": opt_state})
+            params, opt_state = state["params"], state["opt"]
+            print(f"[train] resumed from step {start_step} ({tier} tier)")
+        except FileNotFoundError:
+            pass  # cold start
 
     step_fn = jax.jit(make_train_step(arch, tcfg), **(jit_kwargs or {}))
     board = HeartbeatBoard(heartbeat_dir) if heartbeat_dir else None
 
     metrics = {}
-    for step in range(start_step, tcfg.steps):
-        t0 = time.time()
-        batch = pipeline.batch_at(step)
-        params, opt_state, metrics = step_fn(params, opt_state, batch)
-        jax.block_until_ready(metrics["loss"])
-        dt = time.time() - t0
-        if board:
-            board.beat(Heartbeat(jax.process_index(), step, time.time(), dt))
-        if step % tcfg.log_every == 0:
-            print(f"[train] step {step} loss {float(metrics['loss']):.4f} "
-                  f"({dt*1e3:.0f} ms)")
-        if tcfg.ckpt_dir and (step + 1) % tcfg.ckpt_every == 0:
-            ckpt.save_checkpoint(
-                tcfg.ckpt_dir, step + 1,
-                {"params": params, "opt": opt_state})
-    if tcfg.ckpt_dir:
-        ckpt.save_checkpoint(
-            tcfg.ckpt_dir, tcfg.steps, {"params": params, "opt": opt_state})
+    try:
+        for step in range(start_step, tcfg.steps):
+            t0 = time.time()
+            batch = pipeline.batch_at(step)
+            params, opt_state, metrics = step_fn(params, opt_state, batch)
+            jax.block_until_ready(metrics["loss"])
+            dt = time.time() - t0
+            if board:
+                board.beat(
+                    Heartbeat(jax.process_index(), step, time.time(), dt))
+            if step % tcfg.log_every == 0:
+                print(f"[train] step {step} loss "
+                      f"{float(metrics['loss']):.4f} ({dt*1e3:.0f} ms)")
+            if writer:
+                writer.maybe_save(step + 1,
+                                  {"params": params, "opt": opt_state})
+        if writer:
+            writer.save(tcfg.steps, {"params": params, "opt": opt_state})
+    finally:
+        if writer:
+            writer.close()
     return {k: float(v) for k, v in metrics.items()}

@@ -1,0 +1,303 @@
+"""Resilience loop: GoodPut ledger accounting, torn-checkpoint crash
+drills, cross-tier restore fallback, fault-plan determinism, and the
+supervised fault drill end-to-end (inject -> detect -> restore ->
+elastic resume, with a bit-identical recomputed trajectory)."""
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.data.pipeline import DataConfig, SyntheticLM
+from repro.training import checkpoint as ckpt
+from repro.training import fault
+from repro.training.supervisor import (
+    DrillConfig,
+    GoodPutLedger,
+    SimFleet,
+    Supervisor,
+    price_drill,
+)
+from repro.training.trainer import TrainConfig, make_train_step
+from repro.training.optimizer import OptimizerConfig, init_opt_state
+from repro.models import init_params
+
+
+# ------------------------------------------------------------- ledger
+def test_ledger_partitions_wall_clock():
+    t = {"now": 0.0}
+    led = GoodPutLedger(clock=lambda: t["now"]).start()
+    t["now"] = 3.0
+    led.to("productive")
+    t["now"] = 10.0
+    with led.in_bucket("checkpoint_stall"):
+        t["now"] = 11.0
+    t["now"] = 15.0
+    wall = led.close()
+    assert wall == 15.0
+    assert led.buckets["overhead"] == 3.0      # start..to(productive)
+    assert led.buckets["productive"] == 11.0   # 3..10 and 11..15
+    assert led.buckets["checkpoint_stall"] == 1.0
+    assert sum(led.buckets.values()) == wall
+    assert led.report()["goodput_pct"] == pytest.approx(100 * 11 / 15)
+
+
+def test_ledger_partition_property():
+    pytest.importorskip("hypothesis")
+    from hypothesis import given, settings
+    from hypothesis import strategies as st
+
+    @settings(max_examples=60, deadline=None)
+    @given(st.lists(
+        st.tuples(st.sampled_from(GoodPutLedger.BUCKETS),
+                  st.integers(min_value=0, max_value=1000)),
+        max_size=40))
+    def check(moves):
+        t = {"now": 0.0}
+        led = GoodPutLedger(clock=lambda: t["now"]).start()
+        for bucket, dt in moves:
+            led.to(bucket)
+            t["now"] += dt
+        wall = led.close()
+        # integer-valued fake clock -> float sums are exact
+        assert sum(led.buckets.values()) == wall
+
+    check()
+
+
+def test_ledger_rejects_misuse():
+    led = GoodPutLedger()
+    with pytest.raises(RuntimeError):
+        led.to("productive")     # start() never called
+    with pytest.raises(KeyError):
+        led.start().to("nope")
+
+
+# -------------------------------------------- torn-checkpoint crash drills
+def _tree(scale=1.0):
+    return {"a": jnp.arange(6.0).reshape(2, 3) * scale,
+            "b": {"c": jnp.ones((4,), jnp.float32) * scale}}
+
+
+def test_writer_crash_between_leaf_writes(tmp_path, monkeypatch):
+    d = str(tmp_path / "ck")
+    ckpt.save_checkpoint(d, 1, _tree(1.0))
+    snap = ckpt.snapshot_tree(_tree(2.0))
+
+    calls = {"n": 0}
+    real_save = np.save
+
+    def dying_save(path, arr, **kw):
+        calls["n"] += 1
+        if calls["n"] >= 2:
+            raise OSError("writer killed between leaf writes")
+        return real_save(path, arr, **kw)
+
+    with monkeypatch.context() as m:
+        m.setattr(np, "save", dying_save)
+        with pytest.raises(OSError):
+            ckpt.write_snapshot(d, 2, snap)
+
+    # the torn step was never published: restore loads the prior one
+    assert ckpt.latest_step(d) == 1
+    got, step = ckpt.restore_checkpoint(d, _tree())
+    assert step == 1
+    np.testing.assert_array_equal(np.asarray(got["a"]),
+                                  np.asarray(_tree(1.0)["a"]))
+
+
+def test_writer_crash_between_meta_and_rename(tmp_path, monkeypatch):
+    d = str(tmp_path / "ck")
+    ckpt.save_checkpoint(d, 1, _tree(1.0))
+
+    def dying_rename(src, dst):
+        raise OSError("writer killed before the atomic publish")
+
+    with monkeypatch.context() as m:
+        m.setattr(ckpt.os, "rename", dying_rename)
+        with pytest.raises(OSError):
+            ckpt.write_snapshot(d, 2, ckpt.snapshot_tree(_tree(2.0)))
+
+    # meta.json exists only inside the .tmp dir -> not a candidate
+    assert any(".tmp" in n for n in os.listdir(d))
+    assert ckpt.latest_step(d) == 1
+    _, step = ckpt.restore_checkpoint(d, _tree())
+    assert step == 1
+
+
+def test_async_torn_local_falls_back_to_durable_tier(tmp_path, monkeypatch):
+    w = ckpt.AsyncCheckpointer(
+        str(tmp_path / "durable"), str(tmp_path / "local"),
+        durable_every=1, local_every=1)
+    w.save(1, _tree(1.0), ("durable",))
+    w.drain()
+
+    def dying_save(path, arr, **kw):
+        raise OSError("local medium died mid-write")
+
+    with monkeypatch.context() as m:
+        m.setattr(np, "save", dying_save)
+        w.save(2, _tree(2.0), ("local",))
+        with pytest.warns(UserWarning, match="never published"):
+            w.drain()
+
+    # the torn local step 2 must not exist; restore falls back cross-tier
+    state, step, tier = w.restore(_tree())
+    assert (step, tier) == (1, "durable")
+    np.testing.assert_array_equal(np.asarray(state["a"]),
+                                  np.asarray(_tree(1.0)["a"]))
+    w.close()
+
+
+def test_restore_skips_corrupt_newest_with_warning(tmp_path):
+    d = str(tmp_path / "ck")
+    ckpt.save_checkpoint(d, 2, _tree(1.0))
+    ckpt.save_checkpoint(d, 5, _tree(2.0))
+    # bit-rot the newest step's first leaf
+    sd = os.path.join(d, "step_000000005")
+    leaf = sorted(n for n in os.listdir(sd) if n.endswith(".npy"))[0]
+    with open(os.path.join(sd, leaf), "r+b") as f:
+        f.seek(90)
+        f.write(b"\xde\xad\xbe\xef")
+
+    with pytest.warns(UserWarning, match="step 5"):
+        got, step = ckpt.restore_checkpoint(d, _tree())
+    assert step == 2
+    np.testing.assert_array_equal(np.asarray(got["a"]),
+                                  np.asarray(_tree(1.0)["a"]))
+    with pytest.warns(UserWarning, match="step 5"):
+        assert ckpt.latest_step(d, verify=True) == 2
+    # an explicit step request still fails loudly
+    with pytest.raises(IOError):
+        ckpt.restore_checkpoint(d, _tree(), step=5)
+
+
+# ------------------------------------------------------- fleet + plans
+def test_sim_fleet_detects_only_dead_hosts(tmp_path):
+    board = fault.HeartbeatBoard(str(tmp_path / "hb"))
+    fleet = SimFleet(board, n_hosts=4, chips_per_host=2, timeout_s=3.0)
+    fleet.beat_all(0)
+    fleet.kill(2)
+    assert fleet.detect_dead() == [2]
+    assert fleet.n_chips == 6
+    fleet.decommission(2)
+    # a decommissioned host never re-triggers detection
+    assert fault.detect_failures(board.read_all(), fleet.t + 100,
+                                 timeout_s=3.0) == [0, 1, 3]
+
+
+def test_fault_plan_validation_and_determinism():
+    with pytest.raises(ValueError):
+        fault.FaultEvent(step=0, kind="kill")
+    with pytest.raises(ValueError):
+        fault.FaultEvent(step=1, kind="meteor")
+    with pytest.raises(ValueError):
+        fault.FaultPlan((fault.FaultEvent(2, "kill"),
+                         fault.FaultEvent(2, "device_loss")))
+    p1 = fault.make_fault_plan(3, 20, n_faults=3)
+    p2 = fault.make_fault_plan(3, 20, n_faults=3)
+    assert p1 == p2
+    steps = [e.step for e in p1.events]
+    assert steps == sorted(steps)
+    assert min(abs(a - b) for i, a in enumerate(steps)
+               for b in steps[i + 1:]) >= 2
+    kinds = sorted(e.kind for e in p1.events)
+    assert kinds == ["device_loss", "kill", "straggler"]
+    # injected stragglers must be detectable at the default factor
+    assert all(e.severity >= 4 for e in p1.events if e.kind == "straggler")
+
+
+# ------------------------------------------------------ drill end-to-end
+def _drill_setup():
+    arch = get_config("qwen2-1.5b").reduced().replace(n_layers=2)
+    pipe = SyntheticLM(DataConfig(global_batch=2, seq_len=16,
+                                  vocab_size=arch.vocab_size, seed=3))
+    tcfg = TrainConfig(steps=6,
+                       opt=OptimizerConfig(lr=1e-3, warmup_steps=1,
+                                           total_steps=6))
+    return arch, pipe, tcfg
+
+
+def test_drill_end_to_end_detects_recovers_bit_identical(tmp_path):
+    arch, pipe, tcfg = _drill_setup()
+    plan = fault.FaultPlan((
+        fault.FaultEvent(step=1, kind="straggler", severity=4),
+        fault.FaultEvent(step=2, kind="kill"),
+        fault.FaultEvent(step=4, kind="device_loss"),
+    ))
+
+    def drill(p, wd):
+        dcfg = DrillConfig(workdir=str(tmp_path / wd), steps=6,
+                           local_every=1, durable_every=3,
+                           n_hosts=4, n_chips=8)
+        return Supervisor(arch, tcfg, dcfg, pipe, p, seed=0).run_drill()
+
+    rep = drill(plan, "drill")
+    base = drill(fault.FaultPlan(()), "base")
+
+    # every injected fault detected; the run still finishes
+    assert rep["faults_injected"] == rep["faults_detected"] == 3
+    assert rep["fault_kill"] == rep["fault_device_loss"] == 1
+    assert rep["fault_straggler"] == 1
+    assert rep["final_step"] == 6
+    assert rep["attempts"] == 3           # two restart-class faults
+    assert rep["steps_recomputed"] > 0
+    # kill restores from the fast local tier; device loss invalidates it
+    # and falls back to durable, resuming elastically on fewer chips
+    assert rep["restore_local"] == 1
+    assert rep["restore_durable"] == 1
+    assert rep["remesh_events"] == 1
+    assert rep["dp_width_final"] < rep["dp_width_initial"]
+    # recomputed trajectory is bit-identical to the uninterrupted run
+    assert rep["losses"] == base["losses"]
+    assert base["steps_recomputed"] == 0 and base["attempts"] == 1
+    # ledger partition holds on the real clock too
+    g = rep["goodput"]
+    assert sum(g["buckets_s"].values()) == pytest.approx(g["wall_s"])
+    assert 0 < g["goodput_pct"] < 100
+
+    pr = price_drill(arch, rep, tokens_per_step=2 * 16)
+    assert pr["tokens_computed"] > pr["tokens_useful"]
+    assert pr["pj_per_useful_token"] > pr["pj_per_token"]
+    # baseline has no BadPut to price
+    pb = price_drill(arch, base, tokens_per_step=2 * 16)
+    assert pb["pj_per_useful_token"] == pytest.approx(pb["pj_per_token"])
+
+
+def test_drill_survives_fault_before_first_cadence_save(tmp_path):
+    # a kill at step 1 lands before any cadence checkpoint: the init
+    # (step 0) durable floor must catch it and the run recomputes from 0
+    arch, pipe, tcfg = _drill_setup()
+    plan = fault.FaultPlan((fault.FaultEvent(step=1, kind="kill"),))
+    dcfg = DrillConfig(workdir=str(tmp_path), steps=3,
+                       local_every=10, durable_every=10,
+                       n_hosts=4, n_chips=8)
+    tcfg = TrainConfig(steps=3, opt=tcfg.opt)
+    rep = Supervisor(arch, tcfg, dcfg, pipe, plan, seed=0).run_drill()
+    assert rep["final_step"] == 3
+    assert rep["faults_detected"] == 1
+    assert rep["restore_durable"] == 1
+    assert rep["steps_recomputed"] == 1   # step 0 re-run from the floor
+
+
+# ------------------------------------------ trainer metrics parity (MoE)
+def test_microbatched_aux_loss_survives():
+    arch = get_config("grok-1-314b").reduced().replace(n_layers=2)
+    params = init_params(jax.random.PRNGKey(0), arch)
+    batch = SyntheticLM(DataConfig(global_batch=4, seq_len=32,
+                                   vocab_size=arch.vocab_size)).batch_at(0)
+    o = init_opt_state(params, OptimizerConfig())
+    _, _, m1 = make_train_step(arch, TrainConfig(microbatches=1))(
+        params, o, batch)
+    _, _, m2 = make_train_step(arch, TrainConfig(microbatches=2))(
+        params, o, batch)
+    a1, a2 = float(m1["aux_loss"]), float(m2["aux_loss"])
+    # the scan path used to hardcode aux_loss = 0
+    assert a2 > 0.0
+    # per-microbatch load-balance terms differ slightly from the full
+    # batch's (expert assignment is batch-dependent) but must agree to
+    # ~10%, not vanish
+    assert abs(a2 - a1) / a1 < 0.1
+    assert float(m2["loss"]) == pytest.approx(float(m1["loss"]), rel=0.05)
