@@ -30,6 +30,16 @@ path:
   wall-clock latency percentiles (``ttft_p50_ms`` / ``ttft_p99_ms`` /
   ``tpot_p50_ms`` / ``tpot_p99_ms`` / ``goodput_tok_s``) get the usual
   ratio + noise-floor gates.
+* the prefix_bench leaves (shared-prefix traffic, cache-on vs
+  cache-off) — cache counters (``prefix_hits`` / ``prefix_misses`` /
+  ``prefix_inserts`` / ``prefix_evictions`` / ``prefix_bytes``), token
+  savings (``prefill_tokens_dispatched`` / ``prefill_tokens_saved`` /
+  ``recompute_tokens_saved``), admission reorders, and the derived win
+  booleans (``outputs_identical`` / ``cache_wins_ttft`` /
+  ``cache_wins_dispatches`` / ``prefill_pj_reduced``) — **exact**: all
+  pure functions of the seeded traffic under the virtual clock, and the
+  booleans are the prefix-cache tentpole's acceptance criteria. Wall
+  latency percentiles get the ratio gate as in traffic_bench.
 * the goodput_bench drill counters (``faults_injected`` /
   ``faults_detected`` / ``ckpt_local`` / ``ckpt_durable`` /
   ``steps_recomputed`` / ``restore_local`` / ``restore_durable`` /
@@ -107,6 +117,19 @@ _EXACT_KEYS = ("ops_per_token", "analog_ops_per_token", "on_front",
                "queue_depth_max", "generated_tokens", "goodput_tokens",
                "knee_rate_frac", "beats_static_above_capacity",
                "prefill_executables",
+               # prefix_bench leaves: cache counters and token savings are
+               # pure functions of the seeded shared-prefix traffic, and
+               # the derived win booleans (bit-identical outputs, TTFT /
+               # dispatch / prefill-energy wins of cache-on over
+               # cache-off) are the tentpole's acceptance criteria — any
+               # drift means the reuse policy changed without the record
+               # being refreshed
+               "prefix_hits", "prefix_misses", "prefix_inserts",
+               "prefix_evictions", "prefix_bytes",
+               "prefill_tokens_dispatched", "prefill_tokens_saved",
+               "recompute_tokens_saved", "admission_reorders",
+               "outputs_identical", "cache_wins_ttft",
+               "cache_wins_dispatches", "prefill_pj_reduced",
                # goodput_bench drill counters: faults fire at scheduled
                # steps, detection runs on a virtual fleet clock, and the
                # async writer drains at fault boundaries — every counter
@@ -124,7 +147,8 @@ _TO_US = {"warm_us": 1.0, "ttft_ms": 1e3, "ttft_p50_ms": 1e3,
 
 # "audit" is gated by its own CI lane (which writes the report first and
 # compares with --no-run), so it is not in the default bench set.
-_BENCHES = ("kernel", "serve", "energy", "pareto", "traffic", "goodput")
+_BENCHES = ("kernel", "serve", "energy", "pareto", "traffic", "prefix",
+            "goodput")
 
 # records that don't live under experiments/bench/
 _REL_OVERRIDE = {"audit_report": "experiments/audit/audit_report.json"}
@@ -243,6 +267,10 @@ def _fresh_run(bench: str):
     if bench == "traffic":
         from benchmarks import traffic_bench
         return traffic_bench.run(**traffic_bench.SMOKE_PARAMS)
+    if bench == "prefix":
+        from benchmarks import traffic_bench
+        return traffic_bench.run_shared_prefix(
+            **traffic_bench.SHARED_SMOKE_PARAMS)
     if bench == "goodput":
         from benchmarks import goodput_bench
         return goodput_bench.run(**goodput_bench.SMOKE_PARAMS)
@@ -263,6 +291,7 @@ def run(benches=_BENCHES, threshold=1.5, min_us=300.0, fresh=True) -> list:
     names = {"kernel": "kernel_bench_smoke", "serve": "serve_bench_smoke",
              "energy": "e2e_energy_smoke", "pareto": "e2e_pareto_smoke",
              "traffic": "traffic_bench_smoke",
+             "prefix": "prefix_bench_smoke",
              "goodput": "goodput_bench_smoke", "audit": "audit_report"}
     for bench in benches:
         name = names[bench]
@@ -287,9 +316,10 @@ def main() -> None:
     ap.add_argument("--min-us", type=float, default=300.0,
                     help="skip committed cells faster than this (noise floor)")
     ap.add_argument("--bench",
-                    default="kernel,serve,energy,pareto,traffic,goodput",
+                    default="kernel,serve,energy,pareto,traffic,prefix,"
+                            "goodput",
                     help="comma list: kernel,serve,energy,pareto,traffic,"
-                         "goodput,audit "
+                         "prefix,goodput,audit "
                          "(audit gates experiments/audit/audit_report.json "
                          "exactly; its CI lane runs the CLI then this with "
                          "--no-run)")

@@ -63,6 +63,14 @@ def build_report(config_names: List[str], phases=PHASES, *,
         if verbose:
             print(f"[audit] scheduler invariants: {res['violations']} "
                   f"violations across {len(res['configs'])} configs")
+        # ... and under a hit-heavy prefix-cache trace: adopting cached
+        # prefixes must not add compiles or host transfers
+        res = inv.run_prefix_invariants()
+        report["prefix_invariants"] = res
+        failures += res["violations"]
+        if verbose:
+            print(f"[audit] prefix-cache invariants: {res['violations']} "
+                  f"violations across {len(res['configs'])} configs")
     report["failures"] = failures
     return report
 

@@ -33,6 +33,12 @@ blocking path would compile. The incremental prefill API routes through
 the exact seams the harness instruments (``advance_prefill`` →
 ``_compiled_prefill``; ``finish_prefill`` → ``_fetch``), so the counters
 need no scheduler-specific hooks.
+
+``run_prefix_invariants`` re-proves both properties under a hit-heavy
+prefix-cache trace (``repro.serving.prefix_cache``): cached-prefix
+adoption and boundary-snapshot insertion are device-side and
+chunk-aligned to ``prefill_bucket_min``, so hits must add zero new
+bucket executables and zero host transfers.
 """
 from __future__ import annotations
 
@@ -44,7 +50,8 @@ import numpy as np
 from repro.serving.engine import Engine, ServeConfig, _decode_raw, _prefill_raw
 
 __all__ = ["InvariantViolation", "InstrumentedEngine", "run_invariants",
-           "run_scheduler_invariants", "INVARIANT_CONFIGS"]
+           "run_scheduler_invariants", "run_prefix_invariants",
+           "INVARIANT_CONFIGS"]
 
 # Reduced-arch subset covering the three cache families (attention KV,
 # RG-LRU recurrent, SSM state) — the shapes that have historically driven
@@ -234,6 +241,76 @@ def run_scheduler_invariants(configs=INVARIANT_CONFIGS) -> dict:
     for name in configs:
         try:
             out[name] = _drive_scheduler(name)
+        except InvariantViolation as e:   # keep auditing the rest
+            out[name] = {"error": str(e)}
+            failures.append(name)
+    return {"configs": out, "violations": len(failures),
+            "failed": failures}
+
+
+def _drive_prefix(arch_name: str, n_requests: int = 8) -> dict:
+    """Hit-heavy prefix-cache trace through the instrumented engine:
+    shared-prefix Zipf traffic with the cache enabled, so most
+    admissions adopt a cached prefix (device-side restore) and prefill
+    only suffixes. The compile budget must hold — adopted prefixes
+    compose with the *same* bucket executables (chunk == bucket_min
+    alignment), so a hit can never introduce a new bucket trace — and
+    the fetch arithmetic is unchanged: one first-token selection per
+    admission + one per decode step; snapshot capture/restore crosses
+    nothing to the host."""
+    from repro.configs import get_config
+    from repro.models import init_params
+    from repro.serving.scheduler import (
+        Scheduler, SchedulerConfig, StepClock, run_open_loop,
+        synth_shared_prefix_traffic)
+
+    arch = get_config(arch_name).reduced()
+    params = init_params(jax.random.PRNGKey(0), arch)
+    eng = InstrumentedEngine(
+        arch, params, ServeConfig(batch_slots=2, max_ctx=64,
+                                  prefix_cache_bytes=1 << 24))
+    clock = StepClock()
+    sched = Scheduler(eng, SchedulerConfig(prefill_token_budget=8),
+                      clock=clock.now)
+    traffic = synth_shared_prefix_traffic(
+        n_requests, 0.5, seed=0, vocab_size=arch.vocab_size,
+        n_prefixes=2, prefix_len=16, user_len=(3, 10), out_len=(2, 6))
+    run_open_loop(sched, traffic, tick=clock.tick)
+    report = eng.check()
+    pc = eng.prefix_cache
+    if pc.stats["hits"] < 1:
+        raise InvariantViolation(
+            f"{arch_name}: hit-heavy trace produced no prefix hits "
+            f"({pc.stats}) — the drive is not exercising the cache")
+    done = [r for r in sched.finished if r.finish_reason != "rejected"]
+    if len(done) != n_requests:
+        raise InvariantViolation(
+            f"{arch_name}: {len(done)}/{n_requests} requests completed "
+            "under the prefix-cache scheduler")
+    want = sched.stats["admitted"] + eng.steps_checked
+    if eng.fetches != want:
+        raise InvariantViolation(
+            f"{arch_name}: {eng.fetches} fetches for "
+            f"{sched.stats['admitted']} admissions + {eng.steps_checked} "
+            f"decode steps (expected {want}) — prefix adoption/insertion "
+            "must stay device-side")
+    report["completed"] = len(done)
+    report["prefix_hits"] = pc.stats["hits"]
+    report["prefix_misses"] = pc.stats["misses"]
+    report["prefix_inserts"] = pc.stats["inserts"]
+    report["prefill_tokens_saved"] = eng.stats["prefix_hit_tokens"]
+    return report
+
+
+def run_prefix_invariants(configs=INVARIANT_CONFIGS) -> dict:
+    """Prefix-cache invariant run (see ``_drive_prefix``): compile
+    budget and one-transfer rule re-proven under a hit-heavy trace;
+    same report shape as ``run_invariants``."""
+    out: Dict[str, dict] = {}
+    failures: List[str] = []
+    for name in configs:
+        try:
+            out[name] = _drive_prefix(name)
         except InvariantViolation as e:   # keep auditing the rest
             out[name] = {"error": str(e)}
             failures.append(name)

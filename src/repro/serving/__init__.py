@@ -1,8 +1,8 @@
-"""Serving stack: the slot ``Engine`` and the continuous-batching
-``Scheduler`` above it.
+"""Serving stack: the slot ``Engine``, the ``PrefixCache`` beside it,
+and the continuous-batching ``Scheduler`` above both.
 
-Two layers, one seam
---------------------
+Three layers, two seams
+-----------------------
 * ``engine``    — mechanism. Fixed-size decode batch ("slots"), bucketed
   chunked prefill (one compiled dispatch per power-of-two chunk), fused
   on-device sampling (exactly one device→host transfer per decode step),
@@ -11,7 +11,10 @@ Two layers, one seam
   (``begin_request`` / ``advance_prefill`` / ``finish_prefill`` /
   ``release_slot`` / ``free_slots``) is the scheduler seam:
   ``add_request`` is the blocking composition of the same methods.
-* ``scheduler`` — policy. FIFO queue with WAITING → PREFILLING →
+* ``prefix_cache`` — reuse. A trie over token-id chunks caching per-slot
+  prefill snapshots so shared system prompts prefill once.
+* ``scheduler`` — policy. FIFO (or shortest-prompt-first with an
+  anti-starvation age bound) queue with WAITING → PREFILLING →
   RUNNING → FINISHED states (plus PREEMPTED under overload), admission
   control against free slots and ``max_ctx``, chunked prefill
   interleaved into decode iterations under a per-step token budget, and
@@ -19,26 +22,65 @@ Two layers, one seam
   goodput. See ``scheduler``'s module docstring for the state machine,
   budget semantics, preemption policy, and goodput definitions.
 
+Prefix-cache design note
+------------------------
+``ServeConfig.prefix_cache_bytes`` turns reuse on; the essentials
+(full detail in ``prefix_cache``'s module docstring):
+
+* **Key alignment.** Trie edges are ``prefill_bucket_min``-token
+  chunks, so every cached boundary is a length the existing
+  power-of-two bucket executables already serve — adopting a prefix and
+  prefilling the suffix introduces **zero new compiles**, and the
+  compile-budget / one-transfer invariants are re-proven under a
+  hit-heavy trace (``repro.analysis.invariants.run_prefix_invariants``).
+* **Snapshot layout per arch family.** Snapshots mirror the engine
+  cache pytree with the slot lane extracted: ``attn`` layers store K/V
+  rows ``[:P]`` (sliceable to any shorter shared prefix for
+  pure-attention archs — RadixAttention-style subsumption); ``local``
+  ring buffers are copied whole (validity re-derives from the restored
+  length); ``rglru``/``ssm`` store the recurrent state + conv tail — a
+  few KB per prefix regardless of its length, the fixed-state economy
+  the GPU paged-KV stacks don't have. Capture and restore are
+  device-side (no host crossing).
+* **Eviction.** One LRU over snapshot entries under the byte budget;
+  hits refresh recency, evicted entries prune their trie path, counters
+  (hits/misses/inserts/evictions/bytes) are exact-gated in CI.
+* **Exactness contract.** Snapshots are captured live at chunk-aligned
+  boundaries during prefill; bucketed==token chunking equivalence makes
+  a restored prefix bit-identical to a cold lane, so hit streams equal
+  cold-prefill streams exactly (tested across attn/rglru/ssm/moe).
+  Lookup always leaves ≥1 suffix token so ``finish_prefill`` has real
+  last-token logits.
+
+Follow-up (ROADMAP item 2): block/paged KV layout so attention restores
+stop copying dense lanes, then disaggregated prefill/decode engines
+with explicit KV/state handoff.
+
 Benchmarks: ``benchmarks/serve_bench.py`` (fixed-batch TTFT/TPOT),
-``benchmarks/traffic_bench.py`` (open-loop Poisson traffic: goodput vs
-arrival rate, saturation knee, continuous vs static batching).
+``benchmarks/traffic_bench.py`` (open-loop Poisson + closed-loop
+fixed-concurrency traffic: goodput vs arrival rate, saturation knee,
+continuous vs static batching, shared-prefix cache-on vs cache-off).
 Invariants: ``repro.analysis.invariants`` proves the compile budget and
-one-transfer-per-step rules hold under both hand-placed and
-scheduler-driven serving.
+one-transfer-per-step rules hold under hand-placed, scheduler-driven,
+and prefix-hit-heavy serving.
 """
 from repro.serving.engine import Engine, ServeConfig, StepResult, energy_report
+from repro.serving.prefix_cache import PrefixCache
 from repro.serving.scheduler import (
     Request,
     Scheduler,
     SchedulerConfig,
     StaticBatchScheduler,
     StepClock,
+    run_closed_loop,
     run_open_loop,
+    synth_shared_prefix_traffic,
     synth_traffic,
 )
 
 __all__ = [
-    "Engine", "ServeConfig", "StepResult", "energy_report",
+    "Engine", "ServeConfig", "StepResult", "energy_report", "PrefixCache",
     "Request", "Scheduler", "SchedulerConfig", "StaticBatchScheduler",
-    "StepClock", "run_open_loop", "synth_traffic",
+    "StepClock", "run_open_loop", "run_closed_loop", "synth_traffic",
+    "synth_shared_prefix_traffic",
 ]

@@ -72,6 +72,15 @@ finish``, so both entry points share one code path and stay equivalent.
 ``max_new_tokens``, preemption); ``free_slots`` is the admission-control
 counter (active and mid-prefill lanes both count as occupied).
 
+Prefix cache (``repro.serving.prefix_cache``): with
+``ServeConfig.prefix_cache_bytes`` set (or an explicit ``PrefixCache``
+passed to the constructor), ``begin_request`` adopts the longest cached
+prefix into the claimed lane device-side and queues only the suffix, and
+``advance_prefill`` stores new chunk-aligned boundary snapshots — both
+composing with the existing bucket executables (no new compiles) and
+the one-transfer invariant (nothing crosses to the host). The module
+docstring of ``prefix_cache`` carries the full design note.
+
 Sampling contract: ``temperature > 0`` samples **only when a PRNG key is
 passed** — ``add_request``/``finish_prefill`` with ``temperature > 0``
 and no ``key`` fall back to greedy argmax *with an explicit
@@ -92,6 +101,11 @@ import numpy as np
 from repro.configs.base import ArchConfig
 from repro.core import costs
 from repro.models import decode_step, init_cache, prefill_step
+from repro.serving.prefix_cache import (
+    PrefixCache,
+    restore_slot,
+    snapshot_slot,
+)
 
 __all__ = ["ServeConfig", "Engine", "StepResult", "energy_report"]
 
@@ -214,10 +228,17 @@ class ServeConfig:
     prefill_mode: str = "bucketed"
     prefill_bucket_min: int = 8
     prefill_bucket_max: int = 1024
+    # Prefix cache (repro.serving.prefix_cache): byte budget for cached
+    # prefill snapshots. When set, ``begin_request`` adopts the longest
+    # cached prefix into the claimed lane (only the suffix is dispatched)
+    # and ``advance_prefill`` stores new chunk-aligned boundaries.
+    # Requires bucketed prefill. None disables caching entirely.
+    prefix_cache_bytes: Optional[int] = None
 
 
 class Engine:
-    def __init__(self, arch: ArchConfig, params, cfg: ServeConfig):
+    def __init__(self, arch: ArchConfig, params, cfg: ServeConfig,
+                 prefix_cache: Optional["PrefixCache"] = None):
         assert arch.input_mode == "tokens", "engine serves token models"
         if cfg.cim_backend is not None:
             arch = arch.replace(cim=arch.cim.with_backend(cfg.cim_backend))
@@ -250,7 +271,32 @@ class Engine:
         self._pending_finished: List[int] = []
         # lazily-computed decode-phase energy report (None until asked)
         self._energy: Optional[dict] = None
-        self.stats = {"prefill_dispatches": 0, "decode_steps": 0}
+        # Prefix cache: an explicit instance may be shared across engines
+        # (cache-aware routing); cfg.prefix_cache_bytes builds a private
+        # one. Chunk granularity MUST be the smallest prefill bucket so
+        # every stored boundary composes with the existing power-of-two
+        # bucket executables — zero new compiles on the hit path.
+        if prefix_cache is None and cfg.prefix_cache_bytes is not None:
+            prefix_cache = PrefixCache(cfg.prefix_cache_bytes,
+                                       chunk_tokens=cfg.prefill_bucket_min)
+        if prefix_cache is not None:
+            if cfg.prefill_mode != "bucketed":
+                raise ValueError(
+                    "prefix cache requires prefill_mode='bucketed' (the "
+                    "token path replays whole prompts)")
+            if prefix_cache.chunk != cfg.prefill_bucket_min:
+                raise ValueError(
+                    f"prefix cache chunk {prefix_cache.chunk} != "
+                    f"prefill_bucket_min {cfg.prefill_bucket_min}: cached "
+                    "boundaries would not align with bucket executables")
+        self.prefix_cache = prefix_cache
+        # tokens adopted from the prefix cache for the slot's current
+        # occupant (0 = cold prefill) — the scheduler's savings counter
+        self._adopted = np.zeros(cfg.batch_slots, np.int64)
+        # prefill_tokens counts prompt tokens actually dispatched (suffix
+        # only, under hits) — the CostLedger's prefill energy multiplier
+        self.stats = {"prefill_dispatches": 0, "decode_steps": 0,
+                      "prefill_tokens": 0, "prefix_hit_tokens": 0}
 
     # ------------------------------------------------------- compiled fns
     # Per-engine indirection over the shared executable caches: the single
@@ -358,11 +404,31 @@ class Engine:
         self._pending_logits.pop(slot, None)
         eos = eos_id if eos_id is not None else self.cfg.eos_id
         self._eos[slot] = -1 if eos is None else int(eos)
+        self._adopted[slot] = 0
+        if self.prefix_cache is not None:
+            hit = self.prefix_cache.lookup(prompt)
+            if hit is not None:
+                # adopt the cached prefix into the (just-zeroed) lane:
+                # device-side restore, then prefill only the suffix from
+                # cache index P — same bucket executables, no new compiles
+                p, snap = hit
+                self.cache = restore_slot(self.cache, slot, p, snap)
+                self.lengths[slot] = p
+                self._pending_prompt[slot] = list(prompt[p:])
+                self._adopted[slot] = p
+                self.stats["prefix_hit_tokens"] += p
         return slot
 
     def prefill_remaining(self, slot: int) -> int:
         """Prompt tokens of ``slot`` not yet prefilled (0 once drained)."""
         return len(self._pending_prompt.get(slot, ()))
+
+    def adopted_prefix(self, slot: int) -> int:
+        """Prompt tokens the slot's current occupant adopted from the
+        prefix cache at ``begin_request`` (0 = cold prefill). The
+        scheduler reads this right after admission for its
+        prefill-tokens-saved / recompute-savings accounting."""
+        return int(self._adopted[slot])
 
     def advance_prefill(self, slot: int,
                         max_tokens: Optional[int] = None) -> int:
@@ -379,8 +445,25 @@ class Engine:
             take = min(take, int(max_tokens))
         if take <= 0:
             return 0
+        pc = self.prefix_cache
+        if pc is not None and take < len(rem):
+            # a further chunk follows anyway: shrink this one so it ends
+            # on a cache-chunk boundary (snapshots exist only there). The
+            # truncated chunk pads to a smaller-or-equal power-of-two
+            # bucket, so no new executable is introduced.
+            aligned = take - (int(self.lengths[slot]) + take) % pc.chunk
+            if aligned >= 1:
+                take = aligned
         self._pending_logits[slot] = self._prefill_chunk(slot, rem[:take])
         del rem[:take]
+        if pc is not None:
+            done = int(self.lengths[slot])
+            if done > 0 and done % pc.chunk == 0:
+                # capture the boundary live (recurrent state at an
+                # interior length is unrecoverable later); insert() skips
+                # the snapshot thunk when the boundary is already stored
+                pc.insert(self.tokens[slot][:done],
+                          lambda: snapshot_slot(self.cache, slot, done))
         return take
 
     def finish_prefill(self, slot: int,
@@ -505,6 +588,7 @@ class Engine:
             self._snapshot(self.lengths), jnp.asarray(lens))
         self.lengths[slot] += len(chunk)
         self.stats["prefill_dispatches"] += 1
+        self.stats["prefill_tokens"] += len(chunk)
         return logits
 
     def _advance_slot(self, slot: int, token: int, sample: bool = False,
@@ -524,6 +608,7 @@ class Engine:
             float(self.cfg.temperature) if sample else 1.0)
         self.lengths[slot] += 1
         self.stats["prefill_dispatches"] += 1
+        self.stats["prefill_tokens"] += 1
         return int(self._fetch(ids)[slot])
 
     # ------------------------------------------------------------ decode

@@ -1,0 +1,363 @@
+"""Hashed-prefix KV / recurrent-state cache for the serving engine.
+
+At production scale most traffic shares long system-prompt prefixes, yet
+every request re-runs its full prefill — repeating exactly the analog
+MAC + ADC work the paper identifies as energy-dominant. This module lets
+shared prefixes prefill once: a trie keyed on token-id chunks stores
+per-slot cache snapshots, and ``Engine.begin_request`` adopts the
+longest cached prefix into the claimed lane so only the suffix is
+dispatched (SGLang RadixAttention / vLLM automatic-prefix-caching
+style, specialized to this engine's dense per-slot cache layout).
+
+Key alignment (the zero-new-compiles contract)
+----------------------------------------------
+Trie edges are ``chunk_tokens``-token tuples and snapshots live only at
+multiples of ``chunk_tokens`` — the engine passes its
+``prefill_bucket_min`` (the smallest power-of-two prefill bucket), so
+every cached length is a chunk-boundary the *existing* bucket
+executables already serve. After adopting a prefix of P tokens the
+engine prefills the suffix through the same power-of-two bucket
+dispatches as a cold prompt starting at cache index P; no new bucket
+length (hence no new compile) can be introduced by a hit, and the
+compile-budget invariant (≤1 trace per (arch, bucket) executable) is
+re-proven under a hit-heavy trace by
+``repro.analysis.invariants.run_prefix_invariants``.
+
+Snapshot layout per arch family
+-------------------------------
+A snapshot mirrors the engine cache pytree (``superblocks`` carry the
+batch on axis 1, ``tail`` on axis 0) with the slot lane extracted; the
+layer-name suffix (``b0_attn`` → ``attn``) selects the policy:
+
+* ``attn`` — global attention writes K/V linearly by position, so the
+  snapshot stores only the first P context rows per head (the "KV slice
+  up to the cached length"). Restore writes them back at ``[:P]``.
+* ``local`` — sliding-window attention keeps a ring buffer (writes at
+  ``pos % window``); validity is derived from the restored length, so
+  the snapshot stores the full (small) ring verbatim.
+* ``rglru`` / ``ssm`` — the whole prefix collapses into one recurrent
+  state (h + conv tail): a full copy of the per-slot state, a few KB
+  regardless of prefix length. This is the angle GPU paged-KV stacks
+  don't have — for the recurrent archs a cached prefix is nearly free,
+  the same fixed-state economy AFPR-CIM exploits in hardware.
+
+Snapshots are captured and restored **device-side** (jnp slicing /
+``.at[].set``): nothing crosses to the host, so the engine's
+one-D2H-transfer-per-decode-step invariant holds under hits.
+
+Attention-only subsumption
+--------------------------
+When every cached layer is ``attn`` (pure-attention archs, including
+MoE-over-attention), a stored snapshot of N tokens can serve any
+shorter shared prefix of P < N tokens by slicing its KV rows to ``[:P]``
+— lookup therefore matches the *divergence point*, not just exact
+stored lengths. Recurrent states cannot be rewound, so mixed/recurrent
+archs hit only at exactly-stored boundaries (their insert is cheap
+enough to store every boundary instead). Boundary density follows the
+prefill chunking: the scheduler's budgeted path naturally lands a
+boundary per budget-sized chunk, while a blocking ``add_request`` only
+stores the chunk ends it actually dispatches (one per
+``prefill_bucket_max``) — so interleaved serving, the production path,
+is also the cache-dense one.
+
+Eviction policy
+---------------
+One LRU over snapshot-bearing trie nodes under ``byte_budget`` (sum of
+snapshot leaf ``nbytes``). Lookup hits refresh recency (for sliced hits,
+the donor entry's). Inserting past the budget evicts least-recently-used
+entries until it fits; an entry larger than the whole budget is refused.
+Evicted nodes prune their now-empty trie paths. Counters
+(``hits/misses/inserts/evictions/hit_tokens/bytes``) are deterministic
+functions of the request stream and are exact-gated by
+``benchmarks/compare.py`` in CI.
+
+Exactness contract
+------------------
+Snapshots are captured live at chunk-aligned boundaries *during*
+prefill (recurrent state at an interior length is not recoverable after
+the fact), and tests/test_serving_prefill.py already proves bucketed
+chunked prefill is bit-identical to the token-by-token oracle for every
+chunking. A restored prefix therefore reproduces the cold lane state
+bit-for-bit, and the full generated stream after a hit is bit-identical
+to a cold prefill of the same prompt (asserted across all four arch
+families in tests/test_prefix_cache.py). Lookup always leaves ≥1 suffix
+token unadopted so ``finish_prefill`` has real last-token logits to
+select the first output from.
+"""
+from __future__ import annotations
+
+from typing import Dict, List, Optional, Tuple
+
+import jax
+
+__all__ = ["PrefixCache", "snapshot_slot", "restore_slot"]
+
+# cache pytree groups and the axis their per-layer leaves carry the
+# batch (slot) dimension on — the engine's layout contract
+_GROUPS = (("superblocks", 1), ("tail", 0))
+
+
+def _kind(layer_name: str) -> str:
+    """Layer-family suffix of an engine cache layer name (``b0_attn`` →
+    ``attn``; ``t1_ssm`` → ``ssm``)."""
+    return layer_name.split("_", 1)[1]
+
+
+def _take(arr, batch_axis: int, slot: int):
+    """Extract one slot lane (full copy — ring buffers, recurrent h/conv)."""
+    idx = [slice(None)] * arr.ndim
+    idx[batch_axis] = slot
+    return arr[tuple(idx)]
+
+
+def _take_ctx(arr, batch_axis: int, slot: int, length: int):
+    """Extract one slot lane's first ``length`` context rows (linear
+    positional K/V: the context axis follows the batch axis)."""
+    idx = [slice(None)] * arr.ndim
+    idx[batch_axis] = slot
+    idx[batch_axis + 1] = slice(0, length)
+    return arr[tuple(idx)]
+
+
+def _put(arr, batch_axis: int, slot: int, val):
+    idx = [slice(None)] * arr.ndim
+    idx[batch_axis] = slot
+    return arr.at[tuple(idx)].set(val)
+
+
+def _put_ctx(arr, batch_axis: int, slot: int, length: int, val):
+    idx = [slice(None)] * arr.ndim
+    idx[batch_axis] = slot
+    idx[batch_axis + 1] = slice(0, length)
+    return arr.at[tuple(idx)].set(val)
+
+
+def snapshot_slot(cache, slot: int, length: int) -> dict:
+    """Device-side snapshot of one slot lane at prefix ``length``:
+    ``attn`` layers keep only their first ``length`` K/V rows, every
+    other family (ring buffers, recurrent states) is copied whole.
+    Mirrors the cache pytree structure so restore is a structural zip."""
+    out = {}
+    for group, axis in _GROUPS:
+        if group not in cache:
+            continue
+        g = {}
+        for name, layer in cache[group].items():
+            if _kind(name) == "attn":
+                g[name] = {k: _take_ctx(a, axis, slot, length)
+                           for k, a in layer.items()}
+            else:
+                g[name] = jax.tree.map(lambda a: _take(a, axis, slot), layer)
+        out[group] = g
+    return out
+
+
+def restore_slot(cache, slot: int, length: int, snap: dict) -> dict:
+    """Write a snapshot back into one slot lane of a (possibly larger)
+    engine cache; the inverse of ``snapshot_slot``. Purely functional —
+    returns the new cache pytree."""
+    out = dict(cache)
+    for group, axis in _GROUPS:
+        if group not in cache:
+            continue
+        g = dict(cache[group])
+        for name, layer in snap[group].items():
+            if _kind(name) == "attn":
+                g[name] = {k: _put_ctx(cache[group][name][k], axis, slot,
+                                       length, v)
+                           for k, v in layer.items()}
+            else:
+                g[name] = jax.tree.map(
+                    lambda a, v: _put(a, axis, slot, v),
+                    cache[group][name], layer)
+        out[group] = g
+    return out
+
+
+def _snap_bytes(snap: dict) -> int:
+    return sum(leaf.nbytes for leaf in jax.tree.leaves(snap))
+
+
+def _slice_snapshot(snap: dict, length: int) -> dict:
+    """Rewind an attention-only snapshot to a shorter prefix by slicing
+    every K/V leaf's context axis to ``[:length]`` (context is axis 1
+    under ``superblocks`` — after dropping the batch axis — and axis 0
+    under ``tail``). Only valid when every layer kind is ``attn``."""
+    out = {}
+    for group, axis in _GROUPS:
+        if group not in snap:
+            continue
+        ctx_axis = axis  # the batch axis was extracted: ctx shifted down 1
+        g = {}
+        for name, layer in snap[group].items():
+            assert _kind(name) == "attn", "sliced lookup on non-attn layer"
+            def cut(a):
+                idx = [slice(None)] * a.ndim
+                idx[ctx_axis] = slice(0, length)
+                return a[tuple(idx)]
+            g[name] = {k: cut(a) for k, a in layer.items()}
+        out[group] = g
+    return out
+
+
+def _sliceable(snap: dict) -> bool:
+    return all(_kind(name) == "attn"
+               for group, _ in _GROUPS if group in snap
+               for name in snap[group])
+
+
+class _Node:
+    __slots__ = ("children", "parent", "edge", "snap", "length", "nbytes")
+
+    def __init__(self, parent=None, edge=None):
+        self.children: Dict[Tuple[int, ...], "_Node"] = {}
+        self.parent = parent
+        self.edge = edge          # chunk tuple keying this node in parent
+        self.snap = None          # snapshot pytree, or None (path-only node)
+        self.length = 0           # prefix tokens covered by self.snap
+        self.nbytes = 0
+
+
+class PrefixCache:
+    """Chunk-aligned prefix trie with LRU-evicted per-slot snapshots.
+
+    ``chunk_tokens`` must equal the engine's ``prefill_bucket_min`` so
+    every stored boundary composes with the existing bucket executables
+    (the engine asserts this when wiring the cache in).
+    """
+
+    def __init__(self, byte_budget: int, chunk_tokens: int = 8):
+        if chunk_tokens < 1:
+            raise ValueError("chunk_tokens must be >= 1")
+        self.chunk = int(chunk_tokens)
+        self.byte_budget = int(byte_budget)
+        self._root = _Node()
+        # LRU over snapshot-bearing nodes: dict insertion order, oldest
+        # first (Python dicts are ordered; touch = delete + re-add)
+        self._lru: Dict[_Node, None] = {}
+        self._sliceable: Optional[bool] = None  # learned from first insert
+        self.stats = {"hits": 0, "misses": 0, "inserts": 0,
+                      "evictions": 0, "hit_tokens": 0, "bytes": 0}
+
+    # ------------------------------------------------------------- lookup
+    def lookup(self, prompt: List[int]) -> Optional[Tuple[int, dict]]:
+        """Longest usable cached prefix of ``prompt``: returns
+        ``(length, snapshot)`` or None. Capped at ``len(prompt) - 1`` so
+        at least one suffix token remains to prefill (``finish_prefill``
+        needs real last-token logits). Counts one hit or miss."""
+        usable = (len(prompt) - 1) // self.chunk  # whole chunks adoptable
+        node, depth = self._root, 0
+        best: Optional[_Node] = None
+        while depth < usable:
+            nxt = node.children.get(
+                tuple(prompt[depth * self.chunk:(depth + 1) * self.chunk]))
+            if nxt is None:
+                break
+            node, depth = nxt, depth + 1
+            if node.snap is not None:
+                best = node
+        if self._sliceable and depth > (best.length // self.chunk
+                                        if best else 0):
+            # attention-only: any stored descendant of the deepest matched
+            # node shares its first depth*chunk tokens with the prompt —
+            # slice the most recently used one down to the match point
+            donor = self._mru_descendant(node)
+            if donor is not None and donor.length > depth * self.chunk:
+                self._touch(donor)
+                self.stats["hits"] += 1
+                self.stats["hit_tokens"] += depth * self.chunk
+                return depth * self.chunk, _slice_snapshot(
+                    donor.snap, depth * self.chunk)
+        if best is None:
+            self.stats["misses"] += 1
+            return None
+        self._touch(best)
+        self.stats["hits"] += 1
+        self.stats["hit_tokens"] += best.length
+        return best.length, best.snap
+
+    def _mru_descendant(self, node: _Node) -> Optional[_Node]:
+        """Most recently used snapshot-bearing node in ``node``'s subtree
+        (including itself)."""
+        found = None
+        for cand in reversed(self._lru):  # MRU first
+            n = cand
+            while n is not None:
+                if n is node:
+                    found = cand
+                    break
+                n = n.parent
+            if found is not None:
+                break
+        return found
+
+    # ------------------------------------------------------------- insert
+    def insert(self, prefix: List[int], snap_fn) -> bool:
+        """Store a snapshot for ``prefix`` (length must be a positive
+        multiple of ``chunk``). ``snap_fn()`` builds the snapshot pytree
+        lazily — it is not called when the boundary is already cached
+        (identical prefix ⇒ identical state, by the determinism
+        contract). Returns True when a new entry was stored."""
+        n = len(prefix)
+        if n <= 0 or n % self.chunk:
+            raise ValueError(
+                f"prefix length {n} not a positive multiple of chunk "
+                f"{self.chunk}")
+        node = self._root
+        for d in range(n // self.chunk):
+            key = tuple(prefix[d * self.chunk:(d + 1) * self.chunk])
+            nxt = node.children.get(key)
+            if nxt is None:
+                nxt = node.children[key] = _Node(node, key)
+            node = nxt
+        if node.snap is not None:
+            self._touch(node)
+            return False
+        snap = snap_fn()
+        nbytes = _snap_bytes(snap)
+        if nbytes > self.byte_budget:
+            # can never fit; refuse rather than thrash, and prune any
+            # path nodes this attempt created
+            while (node.parent is not None and not node.children
+                   and node.snap is None):
+                parent = node.parent
+                del parent.children[node.edge]
+                node = parent
+            return False
+        if self._sliceable is None:
+            self._sliceable = _sliceable(snap)
+        node.snap, node.length, node.nbytes = snap, n, nbytes
+        self._lru[node] = None
+        self.stats["bytes"] += nbytes
+        self.stats["inserts"] += 1
+        while self.stats["bytes"] > self.byte_budget:
+            self._evict(next(iter(self._lru)))
+        return True
+
+    # ----------------------------------------------------------- internals
+    def _touch(self, node: _Node) -> None:
+        del self._lru[node]
+        self._lru[node] = None
+
+    def _evict(self, node: _Node) -> None:
+        self.stats["bytes"] -= node.nbytes
+        self.stats["evictions"] += 1
+        node.snap, node.length, node.nbytes = None, 0, 0
+        del self._lru[node]
+        # prune now-empty path suffix so the trie doesn't accrete tokens
+        while (node.parent is not None and not node.children
+               and node.snap is None):
+            parent = node.parent
+            del parent.children[node.edge]
+            node = parent
+
+    def __len__(self) -> int:
+        return len(self._lru)
+
+    @property
+    def bytes(self) -> int:
+        return self.stats["bytes"]
+
+    def hit_rate(self) -> float:
+        n = self.stats["hits"] + self.stats["misses"]
+        return self.stats["hits"] / n if n else 0.0

@@ -4,9 +4,18 @@ The engine has the fast serving primitives — bucketed chunked prefill,
 fused one-transfer decode, per-slot EOS freeing — but no brain above
 them: callers hand-place requests into slots and ``add_request`` raises
 when they are full. This module is that brain: a vLLM-style scheduler
-with a FIFO request queue, admission control, chunked prefill
-*interleaved* into decode iterations under a per-step token budget, and
-per-request TTFT/TPOT/pJ-per-token accounting.
+with a FIFO request queue (or shortest-prompt-first admission with an
+anti-starvation age bound — ``SchedulerConfig.admission``), admission
+control, chunked prefill *interleaved* into decode iterations under a
+per-step token budget, and per-request TTFT/TPOT/pJ-per-token
+accounting. When the engine carries a prefix cache
+(``repro.serving.prefix_cache``) admission adopts cached prefixes
+transparently: the prefill budget is charged only for suffix tokens
+actually dispatched, preemption recompute-resume becomes a (mostly)
+cache hit, and ``metrics()`` reports hit rate,
+``prefill_tokens_saved`` and ``recompute_tokens_saved`` beside the
+cache counters. Traffic drivers: ``run_open_loop`` (Poisson offered
+load) and ``run_closed_loop`` (fixed client concurrency).
 
 Queue states
 ------------
@@ -96,7 +105,8 @@ from repro.serving.engine import Engine
 __all__ = [
     "WAITING", "PREFILLING", "RUNNING", "PREEMPTED", "FINISHED",
     "Request", "SchedulerConfig", "Scheduler", "StaticBatchScheduler",
-    "StepClock", "synth_traffic", "run_open_loop",
+    "StepClock", "synth_traffic", "synth_shared_prefix_traffic",
+    "run_open_loop", "run_closed_loop",
 ]
 
 # request states (plain strings: they go straight into JSON reports)
@@ -172,6 +182,16 @@ class SchedulerConfig:
     # head has waited > preempt_age policy units and no slot is free,
     # evict the most recently admitted in-flight request (recompute)
     preempt_age: Optional[float] = None
+    # admission ordering over the WAITING queue: "fifo" (arrival order,
+    # the default) or "shortest_prompt" (admit the shortest effective
+    # prompt first — lowest time-to-slot-free, the classic SJF latency
+    # win; ties break FIFO)
+    admission: str = "fifo"
+    # anti-starvation bound for non-FIFO admission: once the queue head
+    # has waited > this many policy units it is admitted first
+    # regardless of ordering (None = pure policy, head can starve under
+    # a stream of short prompts)
+    admission_age_bound: Optional[float] = None
 
 
 class Scheduler:
@@ -190,6 +210,10 @@ class Scheduler:
                 "oracle has no chunk seam to interleave through)")
         self.engine = engine
         self.cfg = cfg or SchedulerConfig()
+        if self.cfg.admission not in ("fifo", "shortest_prompt"):
+            raise ValueError(
+                f"unknown admission policy {self.cfg.admission!r} "
+                "(choices: 'fifo', 'shortest_prompt')")
         self.clock = clock
         self.waiting: Deque[Request] = deque()
         self.prefilling: List[Request] = []     # admission order
@@ -200,7 +224,9 @@ class Scheduler:
         self._last_result = None
         self.stats = {"steps": 0, "decode_steps": 0, "admitted": 0,
                       "preempted": 0, "rejected": 0,
-                      "queue_depth_max": 0, "queue_depth_sum": 0}
+                      "queue_depth_max": 0, "queue_depth_sum": 0,
+                      "admission_reorders": 0,
+                      "recompute_tokens_saved": 0}
 
     # ------------------------------------------------------------ intake
     def submit(self, prompt: Sequence[int], max_new_tokens: int,
@@ -247,15 +273,36 @@ class Scheduler:
         static-batching baseline overrides)."""
         return self.engine.free_slots()
 
+    @staticmethod
+    def _effective_prompt(r: Request) -> List[int]:
+        return r.resume_prompt if r.resume_prompt is not None else r.prompt
+
+    def _next_waiting(self, now: float) -> int:
+        """Queue index of the next request to admit. FIFO by default;
+        ``admission="shortest_prompt"`` picks the shortest effective
+        prompt (ties break FIFO) — unless the queue head has aged past
+        ``admission_age_bound``, in which case the head goes first
+        (anti-starvation)."""
+        if self.cfg.admission == "fifo" or len(self.waiting) <= 1:
+            return 0
+        bound = self.cfg.admission_age_bound
+        if bound is not None and (now - self.waiting[0].arrival) > bound:
+            return 0
+        return min(range(len(self.waiting)),
+                   key=lambda i: (len(self._effective_prompt(
+                       self.waiting[i])), i))
+
     def _admit(self, now: float, wall: float) -> List[Request]:
         admitted = []
         budget = self._admissible()
         while self.waiting and budget > 0:
-            r = self.waiting[0]
-            prompt = r.resume_prompt if r.resume_prompt is not None \
-                else r.prompt
+            idx = self._next_waiting(now)
+            if idx != 0:
+                self.stats["admission_reorders"] += 1
+            r = self.waiting[idx]
+            prompt = self._effective_prompt(r)
             if len(prompt) >= self.engine.cfg.max_ctx:
-                self.waiting.popleft()
+                del self.waiting[idx]
                 if r.resume_prompt is not None:
                     # a resume that no longer fits: keep what it generated
                     self._finish(r, "length", now, wall)
@@ -263,8 +310,14 @@ class Scheduler:
                     self.stats["rejected"] += 1
                     self._finish(r, "rejected", now, wall)
                 continue
-            self.waiting.popleft()
+            del self.waiting[idx]
             r.slot = self.engine.begin_request(prompt, eos_id=r.eos_id)
+            if r.resume_prompt is not None:
+                # preemption recompute that the prefix cache absorbed:
+                # the evicted lane's own boundary snapshots make the
+                # re-prefill a (mostly) cache hit
+                self.stats["recompute_tokens_saved"] += \
+                    self.engine.adopted_prefix(r.slot)
             r.state = PREFILLING
             r.t_admit = now
             r.wall_admit = wall
@@ -417,7 +470,7 @@ class Scheduler:
             return float(np.percentile(xs, q) * scale) if xs else None
 
         pj = self.pj_per_token
-        return {
+        out = {
             "completed": len(done),
             "completed_in_slo": len(in_slo),
             "rejected": self.stats["rejected"],
@@ -443,7 +496,24 @@ class Scheduler:
             "pj_per_token": pj,
             "energy_pj": (None if pj is None
                           else pj * sum(r.n_generated for r in done)),
+            # prefill work actually dispatched vs absorbed by the prefix
+            # cache (saved = adopted tokens; both exact under StepClock)
+            "prefill_tokens_dispatched": self.engine.stats["prefill_tokens"],
+            "prefill_tokens_saved": self.engine.stats["prefix_hit_tokens"],
+            "recompute_tokens_saved": self.stats["recompute_tokens_saved"],
+            "admission_reorders": self.stats["admission_reorders"],
         }
+        pc = self.engine.prefix_cache
+        if pc is not None:
+            out.update({
+                "prefix_hits": pc.stats["hits"],
+                "prefix_misses": pc.stats["misses"],
+                "prefix_inserts": pc.stats["inserts"],
+                "prefix_evictions": pc.stats["evictions"],
+                "prefix_bytes": pc.stats["bytes"],
+                "prefix_hit_rate": pc.hit_rate(),
+            })
+        return out
 
 
 class StaticBatchScheduler(Scheduler):
@@ -522,6 +592,38 @@ def synth_traffic(n: int, rate: float, *, seed: int, vocab_size: int,
     ]
 
 
+def synth_shared_prefix_traffic(
+        n: int, rate: float, *, seed: int, vocab_size: int,
+        n_prefixes: int = 4, prefix_len: int = 24, zipf_s: float = 1.1,
+        user_len=(4, 16), out_len=(4, 16)) -> List[TrafficRequest]:
+    """Seeded Poisson traffic whose prompts share system prompts: each
+    request draws one of ``n_prefixes`` fixed ``prefix_len``-token
+    system prompts with Zipf(``zipf_s``) rank probabilities (a few
+    prompts dominate, like production templates do) and appends a unique
+    uniform-random user suffix. Arrival gaps are rate-invariant exactly
+    as in ``synth_traffic``. Keep ``prefix_len`` a multiple of the
+    engine's ``prefill_bucket_min`` so the shared part is a cacheable
+    chunk boundary."""
+    rng = np.random.RandomState(seed)
+    pool = [[int(t) for t in rng.randint(1, vocab_size, size=prefix_len)]
+            for _ in range(n_prefixes)]
+    probs = 1.0 / np.arange(1, n_prefixes + 1) ** zipf_s
+    probs /= probs.sum()
+    arrivals = np.cumsum(rng.exponential(1.0, size=n)) / rate
+    picks = rng.choice(n_prefixes, size=n, p=probs)
+    ulens = rng.randint(user_len[0], user_len[1] + 1, size=n)
+    olens = rng.randint(out_len[0], out_len[1] + 1, size=n)
+    return [
+        TrafficRequest(
+            arrival=float(arrivals[i]),
+            prompt=pool[int(picks[i])] + [
+                int(t) for t in rng.randint(1, vocab_size,
+                                            size=int(ulens[i]))],
+            max_new_tokens=int(olens[i]))
+        for i in range(n)
+    ]
+
+
 def run_open_loop(sched: Scheduler, traffic: Sequence[TrafficRequest], *,
                   tick: Optional[Callable[[float], None]] = None,
                   max_steps: int = 200_000,
@@ -565,5 +667,47 @@ def run_open_loop(sched: Scheduler, traffic: Sequence[TrafficRequest], *,
         if steps >= max_steps:
             raise RuntimeError(
                 f"open-loop run exceeded {max_steps} steps with "
+                f"{len(sched.waiting)} waiting / {len(sched.running)} "
+                "running — traffic does not drain")
+
+
+def run_closed_loop(sched: Scheduler, traffic: Sequence[TrafficRequest], *,
+                    concurrency: int,
+                    tick: Optional[Callable[[float], None]] = None,
+                    max_steps: int = 200_000,
+                    key: Optional[jax.Array] = None) -> int:
+    """Drive ``sched`` closed-loop at fixed concurrency: keep exactly
+    ``concurrency`` requests in flight (submitted minus finished),
+    topping up from ``traffic`` (arrival times ignored — each request
+    "arrives" the moment a virtual client submits it) the instant one
+    completes, until the trace is exhausted and drained. The classic
+    benchmark-client model, complementary to ``run_open_loop``'s
+    offered-load one: latency here measures the service at a fixed
+    population instead of under a fixed arrival rate. Ticks the clock
+    per dispatch exactly like the open-loop driver; returns the number
+    of scheduler steps taken."""
+    if concurrency < 1:
+        raise ValueError("concurrency must be >= 1")
+    i, steps = 0, 0
+    while True:
+        while i < len(traffic) and (i - len(sched.finished)) < concurrency:
+            t = traffic[i]
+            sched.submit(t.prompt, t.max_new_tokens)
+            i += 1
+        if i >= len(traffic) and sched.idle():
+            return steps
+        key, sub = ((None, None) if key is None
+                    else jax.random.split(key))
+        before = (sched.engine.stats["prefill_dispatches"],
+                  sched.engine.stats["decode_steps"])
+        sched.step(sub)
+        after = (sched.engine.stats["prefill_dispatches"],
+                 sched.engine.stats["decode_steps"])
+        steps += 1
+        if tick is not None:
+            tick(max(1.0, float(sum(after) - sum(before))))
+        if steps >= max_steps:
+            raise RuntimeError(
+                f"closed-loop run exceeded {max_steps} steps with "
                 f"{len(sched.waiting)} waiting / {len(sched.running)} "
                 "running — traffic does not drain")

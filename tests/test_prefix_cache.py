@@ -1,0 +1,257 @@
+"""Prefix cache (``repro.serving.prefix_cache``): trie/LRU unit
+behavior on synthetic snapshots, engine-level exactness — a prefix-hit
+token stream must be bit-identical to a cold prefill across all four
+cache families — attention-only subsumption vs recurrent exact-boundary
+hits, dispatch/savings accounting, and the compile/transfer invariants
+under a hit-heavy trace.
+
+Everything is greedy and seeded, so streams and counters are exact."""
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.models import init_params
+from repro.serving.engine import Engine, ServeConfig
+from repro.serving.prefix_cache import PrefixCache, snapshot_slot
+
+# the four cache families the engine serves — the exactness contract
+# (warm stream == cold stream) must hold on every one
+FAMILIES = [
+    ("attn", "qwen2-1.5b"),
+    ("rglru", "recurrentgemma-9b"),
+    ("ssm", "mamba2-1.3b"),
+    ("moe", "grok-1-314b"),
+]
+
+_CACHE = {}
+
+
+def _arch_params(name="qwen2-1.5b"):
+    if name not in _CACHE:
+        arch = get_config(name).reduced()
+        _CACHE[name] = (arch, init_params(jax.random.PRNGKey(0), arch))
+    return _CACHE[name]
+
+
+def _engine(name="qwen2-1.5b", slots=2, ctx=64, **cfg_kw):
+    arch, params = _arch_params(name)
+    return Engine(arch, params,
+                  ServeConfig(batch_slots=slots, max_ctx=ctx, **cfg_kw))
+
+
+def _serve(eng, prompt, n_new, chunk=8):
+    """Chunked (scheduler-style) prefill + greedy decode of one request;
+    returns (generated stream, tokens adopted from the cache). Driving
+    prefill in cache-chunk-sized steps lands a snapshot boundary per
+    chunk — the production (budgeted-scheduler) dispatch pattern."""
+    slot = eng.begin_request(prompt)
+    adopted = eng.adopted_prefix(slot)
+    while eng.prefill_remaining(slot):
+        eng.advance_prefill(slot, max_tokens=chunk)
+    eng.finish_prefill(slot)
+    for _ in range(n_new - 1):          # first token came from prefill
+        eng.step()
+    out = eng.tokens[slot][len(prompt):len(prompt) + n_new]
+    eng.release_slot(slot)
+    return out, adopted
+
+
+# ------------------------------------------------------------ unit: trie
+def _fake_snap(nbytes, kind="ssm"):
+    """Synthetic snapshot pytree with a known byte size. ``kind`` picks
+    the layer-family suffix (non-attn kinds disable sliced lookups, so
+    LRU tests see only exact-boundary hits)."""
+    return {"tail": {f"l0_{kind}": {"h": np.zeros(nbytes, np.uint8)}}}
+
+
+def test_insert_requires_chunk_multiple():
+    pc = PrefixCache(1 << 20, chunk_tokens=4)
+    with pytest.raises(ValueError, match="multiple"):
+        pc.insert([1, 2, 3, 4, 5, 6], lambda: _fake_snap(16))
+    with pytest.raises(ValueError, match="multiple"):
+        pc.insert([], lambda: _fake_snap(16))
+
+
+def test_lookup_leaves_at_least_one_suffix_token():
+    """A prompt equal to a stored prefix must NOT fully adopt it:
+    ``finish_prefill`` needs real last-token logits, so lookup caps at
+    ``len(prompt) - 1`` whole chunks."""
+    pc = PrefixCache(1 << 20, chunk_tokens=4)
+    pc.insert([1, 2, 3, 4], lambda: _fake_snap(16))
+    assert pc.lookup([1, 2, 3, 4]) is None          # would adopt all 4
+    hit = pc.lookup([1, 2, 3, 4, 9])                # 1 suffix token left
+    assert hit is not None and hit[0] == 4
+    # shorter than one chunk + 1: nothing adoptable
+    assert pc.lookup([1, 2, 3]) is None
+    assert pc.stats == {"hits": 1, "misses": 2, "inserts": 1,
+                        "evictions": 0, "hit_tokens": 4, "bytes": 16}
+
+
+def test_partial_chunk_prefix_matches_only_whole_chunks():
+    """Lookup adopts whole stored chunks only: a prompt diverging inside
+    the second chunk still hits the first-chunk boundary."""
+    pc = PrefixCache(1 << 20, chunk_tokens=4)
+    pc.insert([1, 2, 3, 4], lambda: _fake_snap(16))
+    pc.insert([1, 2, 3, 4, 5, 6, 7, 8], lambda: _fake_snap(32))
+    hit = pc.lookup([1, 2, 3, 4, 5, 6, 99, 98, 97])  # diverges at token 7
+    assert hit is not None and hit[0] == 4
+    hit = pc.lookup([1, 2, 3, 4, 5, 6, 7, 8, 9])     # full second chunk
+    assert hit is not None and hit[0] == 8
+
+
+def test_insert_dedupes_without_building_snapshot():
+    """Re-inserting a stored boundary must not call the snapshot thunk
+    (identical prefix ⇒ identical state, by determinism)."""
+    pc = PrefixCache(1 << 20, chunk_tokens=4)
+    assert pc.insert([1, 2, 3, 4], lambda: _fake_snap(16)) is True
+    def boom():
+        raise AssertionError("snapshot rebuilt for a cached boundary")
+    assert pc.insert([1, 2, 3, 4], boom) is False
+    assert pc.stats["inserts"] == 1 and pc.bytes == 16
+
+
+def test_lru_eviction_under_byte_budget():
+    """Budget for two 128-byte entries: a lookup refreshes A's recency,
+    so inserting C evicts B (the least recently used), and the evicted
+    boundary misses afterward."""
+    pc = PrefixCache(256, chunk_tokens=4)
+    a, b, c = [1, 2, 3, 4], [5, 6, 7, 8], [9, 10, 11, 12]
+    pc.insert(a, lambda: _fake_snap(128))
+    pc.insert(b, lambda: _fake_snap(128))
+    assert pc.bytes == 256 and len(pc) == 2
+    assert pc.lookup(a + [0]) is not None        # A is now MRU
+    pc.insert(c, lambda: _fake_snap(128))        # over budget -> evict B
+    assert pc.stats["evictions"] == 1
+    assert pc.bytes == 256 and len(pc) == 2
+    assert pc.lookup(b + [0]) is None            # B gone
+    assert pc.lookup(a + [0]) is not None
+    assert pc.lookup(c + [0]) is not None
+    # the evicted path was pruned from the trie, not left dangling
+    assert tuple(b) not in pc._root.children
+
+
+def test_oversize_snapshot_refused_and_path_pruned():
+    pc = PrefixCache(64, chunk_tokens=4)
+    assert pc.insert([1, 2, 3, 4], lambda: _fake_snap(128)) is False
+    assert pc.stats["inserts"] == 0 and pc.bytes == 0 and len(pc) == 0
+    assert not pc._root.children                 # no dangling path nodes
+
+
+# ------------------------------------------- engine: exactness contract
+@pytest.mark.parametrize("family,name", FAMILIES)
+def test_prefix_hit_stream_bit_identical_to_cold(family, name):
+    """Two prompts sharing a 16-token (2-chunk) prefix: the second
+    adopts the cached boundary, prefills only its suffix, and its full
+    greedy stream must equal a cache-less cold engine's bit-for-bit."""
+    shared = list(range(1, 17))
+    p1 = shared + [21, 22, 23, 24, 25]
+    p2 = shared + [31, 32, 33]
+    n_new = 4
+
+    cold = _engine(name)
+    ref1, _ = _serve(cold, p1, n_new)
+    ref2, _ = _serve(cold, p2, n_new)
+
+    warm = _engine(name, prefix_cache_bytes=1 << 24)
+    out1, adopted1 = _serve(warm, p1, n_new)
+    out2, adopted2 = _serve(warm, p2, n_new)
+
+    assert adopted1 == 0 and out1 == ref1        # cold miss, stores 8/16
+    assert adopted2 == 16, f"{family}: expected a 16-token adoption"
+    assert out2 == ref2, f"{family}: hit stream diverged from cold"
+    pc = warm.prefix_cache
+    assert pc.stats["hits"] == 1 and pc.stats["misses"] == 1
+    assert pc.stats["hit_tokens"] == 16
+    # dispatch accounting: warm prefilled p1 whole + p2's suffix only
+    assert warm.stats["prefill_tokens"] == len(p1) + len(p2) - 16
+    assert warm.stats["prefix_hit_tokens"] == 16
+    assert cold.stats["prefill_tokens"] == len(p1) + len(p2)
+
+
+def test_attn_subsumption_slices_longer_snapshot():
+    """Pure-attention archs rewind: a single stored 24-token snapshot
+    (the only boundary a blocking ``add_request`` lands) serves a prompt
+    sharing just 16 tokens by slicing its KV rows — and the sliced-hit
+    stream still matches a cold run exactly."""
+    prefix24 = list(range(40, 64))
+    p2 = prefix24[:16] + [7, 8, 9]
+    cold = _engine("qwen2-1.5b")
+    ref, _ = _serve(cold, p2, 4)
+
+    warm = _engine("qwen2-1.5b", prefix_cache_bytes=1 << 24)
+    # a blocking add_request dispatches the whole prompt as one chunk,
+    # so the only boundary it can store is the prompt end itself
+    warm.release_slot(warm.add_request(prefix24))
+    assert warm.prefix_cache.stats["inserts"] == 1   # only the 24-end
+    out, adopted = _serve(warm, p2, 4)
+    assert adopted == 16                             # sliced, not exact
+    assert out == ref
+    assert warm.prefix_cache.stats["hit_tokens"] == 16
+
+
+def test_recurrent_hits_only_stored_boundaries():
+    """Recurrent state can't be rewound: with only a 24-token boundary
+    stored, a 16-token shared prefix misses; sharing all 24 hits."""
+    prefix24 = list(range(40, 64))
+    eng = _engine("recurrentgemma-9b", prefix_cache_bytes=1 << 24)
+    eng.release_slot(eng.add_request(prefix24))
+    assert eng.prefix_cache.stats["inserts"] == 1
+
+    _, adopted = _serve(eng, prefix24[:16] + [7, 8, 9], 2)
+    assert adopted == 0                              # no 16-boundary
+    _, adopted = _serve(eng, prefix24 + [7, 8, 9], 2)
+    assert adopted == 24                             # exact boundary
+
+
+def test_chunked_prefill_stores_every_boundary():
+    """Scheduler-style chunked driving lands a snapshot per cache chunk
+    (the dense-boundary production path), so recurrent archs hit at any
+    shared chunk multiple."""
+    eng = _engine("mamba2-1.3b", prefix_cache_bytes=1 << 24)
+    prompt = list(range(1, 25)) + [90, 91]           # 24 shared + suffix
+    _serve(eng, prompt, 2)                           # 8/16/24 stored
+    assert eng.prefix_cache.stats["inserts"] == 3
+    _, adopted = _serve(eng, list(range(1, 9)) + [50, 51], 2)
+    assert adopted == 8
+
+
+# ------------------------------------------------- engine: wiring rules
+def test_prefix_cache_requires_bucketed_mode():
+    arch, params = _arch_params()
+    with pytest.raises(ValueError, match="bucketed"):
+        Engine(arch, params,
+               ServeConfig(batch_slots=1, max_ctx=64, prefill_mode="token",
+                           prefix_cache_bytes=1 << 20))
+
+
+def test_prefix_cache_chunk_must_match_bucket_min():
+    arch, params = _arch_params()
+    with pytest.raises(ValueError, match="bucket"):
+        Engine(arch, params, ServeConfig(batch_slots=1, max_ctx=64),
+               prefix_cache=PrefixCache(1 << 20, chunk_tokens=4))
+
+
+def test_snapshot_restore_roundtrip_is_device_side():
+    """Snapshots never leave the device: every leaf of a live snapshot
+    is a jax.Array, sized as the docstring promises (attn layers carry
+    ``length`` context rows, recurrent layers their full tiny state)."""
+    eng = _engine("qwen2-1.5b", prefix_cache_bytes=1 << 24)
+    slot = eng.begin_request(list(range(1, 17)) + [3])
+    while eng.prefill_remaining(slot):
+        eng.advance_prefill(slot, max_tokens=8)
+    snap = snapshot_slot(eng.cache, slot, 16)
+    leaves = jax.tree.leaves(snap)
+    assert leaves and all(isinstance(a, jax.Array) for a in leaves)
+
+
+# --------------------------------------------- invariants: hit-heavy
+def test_prefix_invariants_hold_under_hit_heavy_trace():
+    """Compile budget (≤1 trace per executable) and the one-D2H-fetch
+    rule re-proven with the cache adopting prefixes mid-trace."""
+    from repro.analysis.invariants import run_prefix_invariants
+    res = run_prefix_invariants(("qwen2-1.5b",))
+    assert res["violations"] == 0, res
+    rep = res["configs"]["qwen2-1.5b"]
+    assert rep["prefix_hits"] >= 1
+    assert rep["prefill_tokens_saved"] > 0

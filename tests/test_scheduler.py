@@ -22,7 +22,9 @@ from repro.serving.scheduler import (
     SchedulerConfig,
     StaticBatchScheduler,
     StepClock,
+    run_closed_loop,
     run_open_loop,
+    synth_shared_prefix_traffic,
     synth_traffic,
 )
 
@@ -290,6 +292,136 @@ def test_synth_traffic_seeded_and_rate_invariant():
     assert [t.max_new_tokens for t in a] == [t.max_new_tokens for t in b]
     # rate scales arrival times only: same pattern, same lengths
     c = synth_traffic(8, 1.0, seed=3, vocab_size=100)
+    np.testing.assert_allclose([t.arrival for t in c],
+                               [t.arrival / 2 for t in a])
+    assert [t.prompt for t in c] == [t.prompt for t in a]
+
+
+def test_shortest_prompt_admission_order():
+    """admission="shortest_prompt" on one slot admits by effective
+    prompt length (shortest first), counting each out-of-FIFO-order
+    pick; FIFO on the same workload admits in arrival order."""
+    def run(**kw):
+        clock = StepClock()
+        sched = _sched(_engine(slots=1), clock, **kw)
+        rs = [sched.submit(list(range(1, n + 1)), max_new_tokens=2,
+                           arrival=0.0) for n in (12, 6, 3)]
+        _drain(sched, clock)
+        return sched, rs
+
+    sched, (r_long, r_mid, r_short) = run(admission="shortest_prompt")
+    assert r_short.t_admit < r_mid.t_admit < r_long.t_admit
+    assert sched.stats["admission_reorders"] == 2
+    for r in (r_long, r_mid, r_short):
+        assert r.finish_reason == "length" and r.n_generated == 2
+
+    sched, rs = run()                   # FIFO control
+    assert rs[0].t_admit < rs[1].t_admit < rs[2].t_admit
+    assert sched.stats["admission_reorders"] == 0
+    assert sched.metrics()["admission_reorders"] == 0
+
+
+def test_admission_age_bound_stops_starvation():
+    """Once the queue head has aged past ``admission_age_bound`` it is
+    admitted first even though shorter prompts are waiting."""
+    clock = StepClock()
+    sched = _sched(_engine(slots=1), clock, admission="shortest_prompt",
+                   admission_age_bound=0.5)
+    r_long = sched.submit(list(range(1, 13)), max_new_tokens=2,
+                          arrival=0.0)
+    shorts = [sched.submit([7, 8, 9], max_new_tokens=2, arrival=0.0)
+              for _ in range(3)]
+    _drain(sched, clock)
+    # the first admission (at t=0, head not yet aged) goes to a short;
+    # by the next free slot (t=1) the head is past the bound and jumps
+    # the remaining shorts
+    assert shorts[0].t_admit < r_long.t_admit
+    assert r_long.t_admit < shorts[1].t_admit < shorts[2].t_admit
+    assert sched.stats["admission_reorders"] == 1
+
+
+def test_unknown_admission_policy_rejected():
+    with pytest.raises(ValueError, match="admission"):
+        Scheduler(_engine(), SchedulerConfig(admission="sjf"))
+
+
+def test_closed_loop_holds_concurrency_and_is_deterministic():
+    """The closed-loop driver keeps at most ``concurrency`` requests in
+    flight (submitted minus finished) and drains the whole trace; two
+    runs over the same traffic are identical."""
+    arch, _ = _arch_params()
+    traffic = synth_traffic(6, 0.3, seed=1, vocab_size=arch.vocab_size,
+                            prompt_len=(3, 12), out_len=(2, 5))
+
+    def run():
+        clock = StepClock()
+        sched = _sched(_engine(slots=2), clock, prefill_token_budget=6)
+        in_flight_max = [0]
+
+        def tick(cost=1.0):
+            live = (len(sched.waiting) + len(sched.prefilling)
+                    + len(sched.running))
+            in_flight_max[0] = max(in_flight_max[0], live)
+            clock.tick(cost)
+
+        run_closed_loop(sched, traffic, concurrency=2, tick=tick)
+        m = sched.metrics()
+        return in_flight_max[0], {k: m[k] for k in
+                                  ("completed", "generated_tokens",
+                                   "decode_steps", "prefill_dispatches",
+                                   "sched_steps")}
+
+    (peak1, m1), (peak2, m2) = run(), run()
+    assert m1 == m2
+    assert m1["completed"] == 6
+    assert peak1 == peak2 == 2          # population pinned at concurrency
+
+
+def test_preemption_resume_rides_the_prefix_cache():
+    """With the prefix cache on, the preempted request's recompute
+    resume adopts its own boundary snapshot instead of re-dispatching
+    the whole prompt-so-far — counted in ``recompute_tokens_saved`` —
+    and the final stream still equals an uninterrupted run."""
+    prompt = [3, 1, 4, 1, 5, 9, 2, 6]   # 8 tokens = one cache chunk
+    n_new = 6
+
+    clock = StepClock()
+    ref = _sched(_engine(slots=1), clock, prefill_token_budget=None)
+    r_ref = ref.submit(prompt, max_new_tokens=n_new, arrival=0.0)
+    _drain(ref, clock)
+
+    clock = StepClock()
+    eng = _engine(slots=1, prefix_cache_bytes=1 << 24)
+    sched = _sched(eng, clock, prefill_token_budget=None, preempt_age=2.0)
+    r0 = sched.submit(prompt, max_new_tokens=n_new, arrival=0.0)
+    sched.submit([2, 7, 1], max_new_tokens=2, arrival=0.0)
+    _drain(sched, clock)
+
+    assert r0.preemptions == 1
+    assert r0.generated == r_ref.generated
+    # the initial prefill stored the 8-token boundary; the resume
+    # adopted it, so only the generated tokens were re-dispatched
+    m = sched.metrics()
+    assert m["recompute_tokens_saved"] == len(prompt)
+    assert m["prefill_tokens_saved"] == len(prompt)
+    assert m["prefix_hits"] == 1
+    # cache-less metrics() stays cache-free (keys are gated on wiring)
+    assert "prefix_hits" not in ref.metrics()
+    assert ref.metrics()["recompute_tokens_saved"] == 0
+
+
+def test_shared_prefix_traffic_seeded_and_shares_prefixes():
+    kw = dict(seed=7, vocab_size=100, n_prefixes=3, prefix_len=8,
+              user_len=(2, 5), out_len=(2, 4))
+    a = synth_shared_prefix_traffic(12, 0.5, **kw)
+    b = synth_shared_prefix_traffic(12, 0.5, **kw)
+    assert [t.prompt for t in a] == [t.prompt for t in b]
+    assert [t.arrival for t in a] == [t.arrival for t in b]
+    heads = [tuple(t.prompt[:8]) for t in a]
+    assert len(set(heads)) <= 3         # drawn from the fixed pool
+    assert max(heads.count(h) for h in set(heads)) >= 2   # actual sharing
+    # rate scales arrivals only, exactly like synth_traffic
+    c = synth_shared_prefix_traffic(12, 1.0, **kw)
     np.testing.assert_allclose([t.arrival for t in c],
                                [t.arrival / 2 for t in a])
     assert [t.prompt for t in c] == [t.prompt for t in a]
