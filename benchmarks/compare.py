@@ -51,6 +51,16 @@ path:
   config); drift means the resilience policy changed without the record
   being refreshed. The drill's ``goodput_pct`` is wall-clock-derived
   and gets the ratio gate.
+* the spec_bench leaves — self-draft speculative decode's
+  ``accepted_tokens_per_step`` / ``spec_steps`` / ``spec_tokens`` /
+  draft/verify/repair dispatch counts, the greedy bit-exactness
+  boolean ``outputs_identical``, and the analytic pJ/accepted-token
+  ``energy_win`` verdict — **exact**: self-draft greedy acceptance is
+  structurally total and the energy account prices deterministic
+  counters through seeded-MC ENOB pricing, so any drift means the
+  draft/verify/accept policy (or the energy model) changed without the
+  record being refreshed. The sequential and speculative ``ttlt_ms``
+  wall times get the usual ratio + noise-floor gate.
 * the ``--bench audit`` leaves (``experiments/audit/audit_report.json``,
   see ``src/repro/analysis``) — **exact**: jaxpr MAC counts, ledger
   cross-check totals, and engine compile/transfer counters are structural
@@ -88,6 +98,8 @@ from benchmarks.common import RESULTS_DIR
 
 # timing leaves: key -> True when larger-is-better (throughput)
 _TIME_KEYS = {"warm_us": False, "ttft_ms": False, "decode_tok_s": True,
+              # spec_bench: wall time to the last token, seq vs spec
+              "ttlt_ms": False,
               # traffic_bench wall-clock latency percentiles + goodput
               "ttft_p50_ms": False, "ttft_p99_ms": False,
               "tpot_p50_ms": False, "tpot_p99_ms": False,
@@ -140,15 +152,25 @@ _EXACT_KEYS = ("ops_per_token", "analog_ops_per_token", "on_front",
                "fault_straggler", "steps_recomputed", "ckpt_local",
                "ckpt_durable", "restore_local", "restore_durable",
                "remesh_events", "dp_width_initial", "dp_width_final",
-               "trajectory_bit_identical", "step", "severity")
+               "trajectory_bit_identical", "step", "severity",
+               # spec_bench leaves: self-draft greedy acceptance is
+               # structurally total, so the acceptance counters and the
+               # dispatch arithmetic are pure functions of the config;
+               # outputs_identical (gated above) is the tentpole's
+               # bit-exactness acceptance criterion, and energy_win is
+               # the deterministic analytic pJ/accepted-token verdict
+               "accepted_tokens_per_step", "spec_steps", "spec_tokens",
+               "draft_dispatches", "verify_dispatches",
+               "repair_dispatches", "energy_win")
 # committed-value scale to microseconds, for the noise floor
-_TO_US = {"warm_us": 1.0, "ttft_ms": 1e3, "ttft_p50_ms": 1e3,
+_TO_US = {"warm_us": 1.0, "ttft_ms": 1e3, "ttlt_ms": 1e3,
+          "ttft_p50_ms": 1e3,
           "ttft_p99_ms": 1e3, "tpot_p50_ms": 1e3, "tpot_p99_ms": 1e3}
 
 # "audit" is gated by its own CI lane (which writes the report first and
 # compares with --no-run), so it is not in the default bench set.
 _BENCHES = ("kernel", "serve", "energy", "pareto", "traffic", "prefix",
-            "goodput")
+            "goodput", "spec")
 
 # records that don't live under experiments/bench/
 _REL_OVERRIDE = {"audit_report": "experiments/audit/audit_report.json"}
@@ -274,6 +296,9 @@ def _fresh_run(bench: str):
     if bench == "goodput":
         from benchmarks import goodput_bench
         return goodput_bench.run(**goodput_bench.SMOKE_PARAMS)
+    if bench == "spec":
+        from benchmarks import spec_bench
+        return spec_bench.run(**spec_bench.SMOKE_PARAMS)
     from benchmarks import serve_bench
     return serve_bench.run(**serve_bench.SMOKE_PARAMS)
 
@@ -292,7 +317,8 @@ def run(benches=_BENCHES, threshold=1.5, min_us=300.0, fresh=True) -> list:
              "energy": "e2e_energy_smoke", "pareto": "e2e_pareto_smoke",
              "traffic": "traffic_bench_smoke",
              "prefix": "prefix_bench_smoke",
-             "goodput": "goodput_bench_smoke", "audit": "audit_report"}
+             "goodput": "goodput_bench_smoke",
+             "spec": "spec_bench_smoke", "audit": "audit_report"}
     for bench in benches:
         name = names[bench]
         committed = _committed(name)
@@ -317,9 +343,9 @@ def main() -> None:
                     help="skip committed cells faster than this (noise floor)")
     ap.add_argument("--bench",
                     default="kernel,serve,energy,pareto,traffic,prefix,"
-                            "goodput",
+                            "goodput,spec",
                     help="comma list: kernel,serve,energy,pareto,traffic,"
-                         "prefix,goodput,audit "
+                         "prefix,goodput,spec,audit "
                          "(audit gates experiments/audit/audit_report.json "
                          "exactly; its CI lane runs the CLI then this with "
                          "--no-run)")

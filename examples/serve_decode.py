@@ -30,7 +30,10 @@ def main():
     for step in range(16):
         out = eng.step()   # on-device greedy sampling: one int32/slot back
         if step % 4 == 0:
-            print(f"  step {step}: {out}")
+            # the typed per-request stream (StepResult.outputs) — one
+            # RequestOutput per live request, with finish reasons
+            print(f"  step {step}: " + ", ".join(
+                f"slot {o.slot}: {o.tokens}" for o in out.outputs))
     print("generated:", {s: eng.tokens[s][-8:] for s in (s0, s1)})
 
     rep = energy_report(arch)   # ledger-derived: traced from the model

@@ -71,6 +71,15 @@ def build_report(config_names: List[str], phases=PHASES, *,
         if verbose:
             print(f"[audit] prefix-cache invariants: {res['violations']} "
                   f"violations across {len(res['configs'])} configs")
+        # ... and under speculative decode: greedy verify/repair must
+        # reuse admission bucket executables (zero compiles beyond the
+        # drafter's own) and repair must fetch nothing
+        res = inv.run_spec_invariants()
+        report["spec_invariants"] = res
+        failures += res["violations"]
+        if verbose:
+            print(f"[audit] speculative invariants: {res['violations']} "
+                  f"violations across {len(res['configs'])} configs")
     report["failures"] = failures
     return report
 

@@ -39,6 +39,19 @@ prefix-cache trace (``repro.serving.prefix_cache``): cached-prefix
 adoption and boundary-snapshot insertion are device-side and
 chunk-aligned to ``prefill_bucket_min``, so hits must add zero new
 bucket executables and zero host transfers.
+
+``run_spec_invariants`` extends the audit to speculative decode
+(``repro.serving.speculative``): the "self" drafter must BE the decode
+executable (same jit key, zero compiles of its own), greedy verify and
+repair chunks must reuse bucket executables admission prefill already
+compiled (checked in place, at dispatch time, by the instrumented
+``verify_chunk``/``repair_chunk``), and the transfer ledger must close
+as ``fetches == admissions + sequential steps + draft dispatches +
+verify dispatches`` — a repair dispatch re-feeds tokens acceptance
+already knows and crosses *nothing* back to the host. A forced-mismatch
+drive (every draft wrong) pins the rollback/repair path per cache
+family, and a sampled drive confirms the rejection-rule verify is one
+executable per bucket, traced once.
 """
 from __future__ import annotations
 
@@ -47,11 +60,12 @@ from typing import Dict, List, Optional
 import jax
 import numpy as np
 
-from repro.serving.engine import Engine, ServeConfig, _decode_raw, _prefill_raw
+from repro.serving.engine import (Engine, ServeConfig, _decode_raw,
+                                  _prefill_raw, _verify_raw)
 
 __all__ = ["InvariantViolation", "InstrumentedEngine", "run_invariants",
            "run_scheduler_invariants", "run_prefix_invariants",
-           "INVARIANT_CONFIGS"]
+           "run_spec_invariants", "INVARIANT_CONFIGS"]
 
 # Reduced-arch subset covering the three cache families (attention KV,
 # RG-LRU recurrent, SSM state) — the shapes that have historically driven
@@ -96,6 +110,37 @@ class InstrumentedEngine(Engine):
     def _compiled_prefill(self, bucket: int):
         return self._counting_jit(f"prefill[bucket={bucket}]",
                                   _prefill_raw(self.arch, bucket))
+
+    def _compiled_draft(self, draft_arch):
+        # the "self" draft policy must reuse the greedy decode executable
+        # (same key), exactly as the production cache does — a separate
+        # key here would hide a real extra compile
+        if draft_arch is self.arch:
+            return self._compiled_decode(False)
+        return self._counting_jit("draft[sample=False]",
+                                  _decode_raw(draft_arch, False))
+
+    def _compiled_verify(self, bucket: int):
+        return self._counting_jit(f"verify[bucket={bucket}]",
+                                  _verify_raw(self.arch, bucket))
+
+    def _require_compiled_bucket(self, what: str, k: int) -> None:
+        key = f"prefill[bucket={self._bucket(k)}]"
+        if key not in self._jits:
+            raise InvariantViolation(
+                f"{what} chunk needed a fresh {key} executable: greedy "
+                "speculative verification must reuse the bucket "
+                "executables admission prefill already compiled")
+
+    def verify_chunk(self, chunk: np.ndarray,
+                     lens: np.ndarray) -> np.ndarray:
+        self._require_compiled_bucket("verify", chunk.shape[1])
+        return super().verify_chunk(chunk, lens)
+
+    def repair_chunk(self, chunk: np.ndarray, lens: np.ndarray,
+                     index: np.ndarray) -> None:
+        self._require_compiled_bucket("repair", chunk.shape[1])
+        return super().repair_chunk(chunk, lens, index)
 
     def _fetch(self, ids_dev) -> np.ndarray:  # instance over staticmethod
         self.fetches += 1
@@ -311,6 +356,167 @@ def run_prefix_invariants(configs=INVARIANT_CONFIGS) -> dict:
     for name in configs:
         try:
             out[name] = _drive_prefix(name)
+        except InvariantViolation as e:   # keep auditing the rest
+            out[name] = {"error": str(e)}
+            failures.append(name)
+    return {"configs": out, "violations": len(failures),
+            "failed": failures}
+
+
+def _drive_spec(arch_name: str, n_requests: int = 5) -> dict:
+    """Three speculative-decode scripts over instrumented engines.
+
+    (a) Scheduler-driven greedy self-speculation over seeded traffic:
+    the self drafter shares the decode jit key, every greedy verify /
+    repair chunk passes the in-place compiled-bucket check (zero new
+    prefill executables beyond admission's own), and the transfer
+    ledger closes: one fetch per admission, per sequential fallthrough
+    step, per draft dispatch and per verify dispatch — repair adds
+    none.
+
+    (b) Forced-mismatch drive: a ``draft_fn`` that is always wrong, so
+    every iteration accepts exactly one token and (on archs with
+    rollback-sensitive state — local rings, RG-LRU, SSM) triggers
+    restore + repair. Proves the repair dispatch is fetch-free and that
+    global-attention archs skip it entirely.
+
+    (c) Sampled drive: rejection-rule verification compiles exactly one
+    ``verify[bucket]`` executable — the only compile speculation is
+    allowed beyond the drafter's own — traced once across steps."""
+    from repro.configs import get_config
+    from repro.models import init_params
+    from repro.serving.params import SamplingParams
+    from repro.serving.scheduler import (
+        Scheduler, SchedulerConfig, StepClock, run_open_loop, synth_traffic)
+    from repro.serving.speculative import SpecConfig, SpecDecoder
+
+    arch = get_config(arch_name).reduced()
+    params = init_params(jax.random.PRNGKey(0), arch)
+
+    # --- (a) scheduler traffic, greedy self-draft speculation
+    eng = InstrumentedEngine(
+        arch, params, ServeConfig(batch_slots=2, max_ctx=64))
+    clock = StepClock()
+    sched = Scheduler(eng, SchedulerConfig(prefill_token_budget=10),
+                      clock=clock.now, spec=SpecConfig(k=4, draft="self"))
+    traffic = synth_traffic(n_requests, 0.5, seed=0,
+                            vocab_size=arch.vocab_size,
+                            prompt_len=(3, 14), out_len=(2, 6))
+    run_open_loop(sched, traffic, tick=clock.tick)
+    report = eng.check()
+    st = eng.stats
+    if st["spec_steps"] < 1 or st["spec_tokens"] <= st["spec_steps"]:
+        raise InvariantViolation(
+            f"{arch_name}: spec drive is not speculating (spec_steps="
+            f"{st['spec_steps']}, spec_tokens={st['spec_tokens']})")
+    extra = [k for k in eng.trace_counts
+             if not (k.startswith("decode[") or k.startswith("prefill["))]
+    if extra:
+        raise InvariantViolation(
+            f"{arch_name}: self-draft speculation compiled executables of "
+            f"its own: {extra} — the self drafter must reuse the decode "
+            "executable and greedy verify the admission prefill buckets")
+    done = [r for r in sched.finished if r.finish_reason != "rejected"]
+    if len(done) != n_requests:
+        raise InvariantViolation(
+            f"{arch_name}: {len(done)}/{n_requests} requests completed "
+            "under the speculative scheduler")
+    want = (sched.stats["admitted"] + eng.steps_checked
+            + st["draft_dispatches"] + st["verify_dispatches"])
+    if eng.fetches != want:
+        raise InvariantViolation(
+            f"{arch_name}: {eng.fetches} fetches for "
+            f"{sched.stats['admitted']} admissions + {eng.steps_checked} "
+            f"sequential steps + {st['draft_dispatches']} drafts + "
+            f"{st['verify_dispatches']} verifies (expected {want}) — "
+            "repair and restore must cross nothing to the host")
+    report["completed"] = len(done)
+    report["spec_steps"] = st["spec_steps"]
+    report["spec_tokens"] = st["spec_tokens"]
+    report["draft_dispatches"] = st["draft_dispatches"]
+    report["verify_dispatches"] = st["verify_dispatches"]
+    report["repair_dispatches"] = st["repair_dispatches"]
+
+    # --- (b) always-wrong drafter: rollback + fetch-free repair
+    eng2 = InstrumentedEngine(
+        arch, params, ServeConfig(batch_slots=2, max_ctx=64))
+    dec2 = SpecDecoder(eng2, SpecConfig(k=4, draft="self"),
+                       draft_fn=lambda cur, t: (cur + 1) % arch.vocab_size)
+    s2 = eng2.add_request([3, 1, 4, 1, 5],
+                          params=SamplingParams(max_tokens=6))
+    while eng2.active[s2]:
+        dec2.step()
+    eng2.check()
+    st2 = eng2.stats
+    if st2["spec_tokens"] != st2["spec_steps"]:
+        raise InvariantViolation(
+            f"{arch_name}: an always-wrong drafter accepted "
+            f"{st2['spec_tokens']} tokens over {st2['spec_steps']} steps "
+            "(greedy acceptance must keep exactly the correction token)")
+    needs_rollback = bool(eng2.spec_snapshot())
+    if needs_rollback != (st2["repair_dispatches"] > 0):
+        raise InvariantViolation(
+            f"{arch_name}: {st2['repair_dispatches']} repair dispatches "
+            f"but rollback-sensitive state present={needs_rollback} — "
+            "recurrent/ring archs must repair on partial acceptance and "
+            "pure global-attention archs must never")
+    want2 = 1 + eng2.steps_checked + st2["verify_dispatches"]
+    if eng2.fetches != want2:
+        raise InvariantViolation(
+            f"{arch_name}: forced-mismatch drive fetched {eng2.fetches} "
+            f"(expected {want2}: 1 admission + {eng2.steps_checked} "
+            f"sequential steps + {st2['verify_dispatches']} verifies; "
+            "draft_fn drafts and repair dispatches fetch nothing)")
+    report["forced_mismatch"] = {
+        "repair_dispatches": st2["repair_dispatches"],
+        "needs_rollback": needs_rollback,
+    }
+
+    # --- (c) sampled verification: one verify executable, traced once
+    eng3 = InstrumentedEngine(
+        arch, params, ServeConfig(batch_slots=2, max_ctx=64))
+    dec3 = SpecDecoder(eng3, SpecConfig(k=4, draft="self"))
+    eng3.add_request([2, 7, 1], params=SamplingParams(
+        temperature=0.7, seed=3, max_tokens=32))
+    for i in range(3):
+        dec3.step(jax.random.PRNGKey(i))
+    eng3.check()
+    n_verify = sum(1 for k in eng3.trace_counts
+                   if k.startswith("verify["))
+    if n_verify != 1:
+        raise InvariantViolation(
+            f"{arch_name}: sampled speculation traced {n_verify} verify "
+            f"executables (expected exactly 1): "
+            f"{dict(eng3.trace_counts)}")
+    st3 = eng3.stats
+    want3 = (1 + eng3.steps_checked + st3["draft_dispatches"]
+             + st3["verify_dispatches"])
+    if eng3.fetches != want3:
+        raise InvariantViolation(
+            f"{arch_name}: sampled drive fetched {eng3.fetches} "
+            f"(expected {want3}) — the packed verify result must be the "
+            "dispatch's single fetch")
+    # structural counts only: sampled *acceptance* depends on platform
+    # float numerics, so it must stay out of the exact-gated golden
+    report["sampled"] = {
+        "verify_executables": n_verify,
+        "draft_dispatches": st3["draft_dispatches"],
+        "verify_dispatches": st3["verify_dispatches"],
+    }
+    return report
+
+
+def run_spec_invariants(configs=INVARIANT_CONFIGS) -> dict:
+    """Speculative-decode invariant run (see ``_drive_spec``): compile
+    budget (verify/repair reuse admission bucket executables; the self
+    drafter reuses the decode executable; sampled verify adds exactly
+    one), one-transfer rule with fetch-free repair, and per-family
+    rollback behaviour; same report shape as ``run_invariants``."""
+    out: Dict[str, dict] = {}
+    failures: List[str] = []
+    for name in configs:
+        try:
+            out[name] = _drive_spec(name)
         except InvariantViolation as e:   # keep auditing the rest
             out[name] = {"error": str(e)}
             failures.append(name)

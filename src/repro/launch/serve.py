@@ -15,6 +15,8 @@ Usage:
         --tokens 32
     PYTHONPATH=src python -m repro.launch.serve --arch gemma3-1b --reduced \
         --traffic 12 --rate 20
+    PYTHONPATH=src python -m repro.launch.serve --arch mamba2-1.3b --reduced \
+        --traffic 12 --spec-k 4 --spec-draft digital
 """
 import argparse
 import time
@@ -31,8 +33,13 @@ from repro.serving.scheduler import (
 def _serve_traffic(arch, params, args) -> None:
     eng = Engine(arch, params, ServeConfig(batch_slots=args.slots,
                                            max_ctx=args.ctx))
+    spec = None
+    if args.spec_k > 1:
+        from repro.serving.speculative import SpecConfig
+        spec = SpecConfig(k=args.spec_k, draft=args.spec_draft)
     sched = Scheduler(
-        eng, SchedulerConfig(prefill_token_budget=args.prefill_budget))
+        eng, SchedulerConfig(prefill_token_budget=args.prefill_budget),
+        spec=spec)
     traffic = synth_traffic(args.traffic, args.rate, seed=args.seed,
                             vocab_size=arch.vocab_size,
                             prompt_len=(8, 48),
@@ -55,6 +62,12 @@ def _serve_traffic(arch, params, args) -> None:
     print(f"TTFT p50/p99: {m['ttft_p50_ms']:.1f}/{m['ttft_p99_ms']:.1f} ms | "
           f"TPOT p50/p99: {m['tpot_p50_ms']:.2f}/{m['tpot_p99_ms']:.2f} ms | "
           f"goodput {m['goodput_tok_s']:.1f} tok/s")
+    if m["spec_steps"]:
+        print(f"spec: {m['accepted_tokens_per_step']:.2f} accepted "
+              f"tok/step over {m['spec_steps']} steps "
+              f"({m['draft_dispatches']} draft / "
+              f"{m['verify_dispatches']} verify / "
+              f"{m['repair_dispatches']} repair dispatches)")
     if arch.cim.enabled:
         print(f"energy: {m['pj_per_token']:.1f} pJ/token "
               f"({m['energy_pj'] / 1e6:.2f} uJ total decode)")
@@ -78,6 +91,16 @@ def main():
                     help="--traffic arrival rate, requests per second")
     ap.add_argument("--prefill-budget", type=int, default=16,
                     help="--traffic prefill tokens interleaved per step")
+    ap.add_argument("--spec-k", type=int, default=1,
+                    help="speculative lookahead for --traffic serving "
+                         "(1 = sequential decode; k >= 2 drafts k-1 "
+                         "tokens per iteration and verifies them in one "
+                         "chunked dispatch)")
+    ap.add_argument("--spec-draft", default="digital",
+                    choices=["digital", "self"],
+                    help="draft policy for --spec-k: 'digital' drafts "
+                         "with the CIM path off, 'self' with the target "
+                         "config itself")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
 
@@ -101,11 +124,17 @@ def main():
           f"{(time.perf_counter() - t0) * 1e3:.1f} ms "
           f"({eng.stats['prefill_dispatches']} prefill dispatches, "
           f"mode={args.prefill_mode})")
-    print(f"step 0: {out}")
+
+    def fmt(res):   # the typed per-request stream, not the raw dict
+        return ", ".join(f"slot {o.slot}: {o.tokens}"
+                         + (f" <{o.finish_reason}>" if o.finished else "")
+                         for o in res.outputs)
+
+    print(f"step 0: {fmt(out)}")
     for i in range(1, args.tokens):
         out = eng.step()
         if i % 8 == 0:
-            print(f"step {i}: {out}")
+            print(f"step {i}: {fmt(out)}")
     if arch.cim.enabled:
         # ledger-derived, per phase: the serving deployment metric next to
         # the serving stats (decode aliases at top level)

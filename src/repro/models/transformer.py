@@ -370,7 +370,8 @@ def decode_step(params, token, cfg: ArchConfig, cache, cache_index):
 
 def prefill_step(params, tokens, cfg: ArchConfig, cache, cache_index, length):
     """Chunked prefill: tokens (B, S) [or (B, S, D) embeddings] -> the
-    logits at each lane's last valid token, (B, V), plus the new cache.
+    logits at each lane's last valid token, (B, V), the greedy token ids
+    at *every* chunk position, (B, S) int32, plus the new cache.
 
     ``cache_index`` (scalar or (B,)) is each lane's write offset; ``length``
     (B,) counts the valid leading tokens of this chunk per lane — the S axis
@@ -381,6 +382,15 @@ def prefill_step(params, tokens, cfg: ArchConfig, cache, cache_index, length):
     cache merging. One compiled dispatch replaces ``length`` token-by-token
     decode dispatches; attention runs chunk-parallel while RG-LRU/SSM states
     advance under an in-graph ``lax.scan`` of the exact decode recurrence.
+
+    The per-position ids row is what lets speculative decoding
+    (``repro.serving.speculative``) reuse THIS executable as its exact
+    verifier: position ``j``'s id is the greedy continuation of the lane's
+    context through chunk token ``j``, so scoring k drafted tokens is one
+    bucketed prefill dispatch whose ids either confirm each draft or supply
+    the correction. The argmax is a tiny fused reduction (pad-vocab columns
+    are already masked to -1e30 above) and the (B, S) int32 row stays on
+    device unless fetched.
     """
     b, s = tokens.shape[0], tokens.shape[1]
     idx = jnp.broadcast_to(jnp.asarray(cache_index), (b,))
@@ -391,4 +401,5 @@ def prefill_step(params, tokens, cfg: ArchConfig, cache, cache_index, length):
         positions=positions, chunk_lengths=length)
     last = jnp.clip(length - 1, 0, s - 1)
     last_logits = jnp.take_along_axis(logits, last[:, None, None], axis=1)
-    return last_logits[:, 0, :], new_cache
+    ids = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+    return last_logits[:, 0, :], ids, new_cache

@@ -56,15 +56,51 @@ Follow-up (ROADMAP item 2): block/paged KV layout so attention restores
 stop copying dense lanes, then disaggregated prefill/decode engines
 with explicit KV/state handoff.
 
+Request API
+-----------
+``SamplingParams`` is the single typed entry for per-request knobs
+(temperature, seed, eos_id, max_tokens, spec_k) — passed to
+``Engine.add_request`` / ``begin_request`` and ``Scheduler.submit`` as
+``params=``; the legacy ``eos_id=`` / ``max_new_tokens=`` kwargs
+convert bit-identically for one release under a ``DeprecationWarning``.
+Results stream back as typed ``RequestOutput`` records on
+``StepResult.outputs`` — per-request tokens, finish flag, finish reason
+(``"eos"`` / ``"length"`` / ``"ctx"``), and lazy pJ/token — the one
+shape engine, scheduler, bench, and ``launch/serve.py`` all consume.
+
+Speculative-decode design note
+------------------------------
+``speculative.SpecDecoder`` wraps an engine and emits up to ``k``
+tokens per iteration: draft ``k - 1`` with a cheap CIM config of the
+*same* model on the *same* cache (no second model, no draft prefill),
+verify all of them in ONE chunked dispatch through the exact grmac
+path — the existing bucketed prefill executables are the verifier, so
+greedy verification adds **zero new compiles** — and keep the longest
+accepted prefix. Greedy acceptance is bit-identical to sequential
+decode across attn/rglru/ssm/moe for any drafter; sampled acceptance
+applies the standard rejection rule on device (unbiased, seeded).
+Recurrent archs roll back via O(1) ``spec_snapshot`` refs + a
+device-side per-lane restore, then one fetch-free repair dispatch
+re-feeds accepted prefixes; global-attention KV needs no rollback at
+all. ``speculative.price_speculation`` prices draft + verify against
+sequential decode on the CostLedger (pJ/accepted-token), asking whether
+speculation is an energy win and not just a latency win. Full detail
+in ``speculative``'s module docstring;
+``repro.analysis.invariants.run_spec_invariants`` machine-checks the
+compile/transfer claims.
+
 Benchmarks: ``benchmarks/serve_bench.py`` (fixed-batch TTFT/TPOT),
 ``benchmarks/traffic_bench.py`` (open-loop Poisson + closed-loop
 fixed-concurrency traffic: goodput vs arrival rate, saturation knee,
-continuous vs static batching, shared-prefix cache-on vs cache-off).
+continuous vs static batching, shared-prefix cache-on vs cache-off),
+``benchmarks/spec_bench.py`` (sequential vs speculative per cache
+family: accepted-tokens/step, TTLT speedup, pJ/accepted-token verdict).
 Invariants: ``repro.analysis.invariants`` proves the compile budget and
 one-transfer-per-step rules hold under hand-placed, scheduler-driven,
-and prefix-hit-heavy serving.
+prefix-hit-heavy, and speculative serving.
 """
 from repro.serving.engine import Engine, ServeConfig, StepResult, energy_report
+from repro.serving.params import RequestOutput, SamplingParams
 from repro.serving.prefix_cache import PrefixCache
 from repro.serving.scheduler import (
     Request,
@@ -77,9 +113,11 @@ from repro.serving.scheduler import (
     synth_shared_prefix_traffic,
     synth_traffic,
 )
+from repro.serving.speculative import SpecConfig, SpecDecoder
 
 __all__ = [
     "Engine", "ServeConfig", "StepResult", "energy_report", "PrefixCache",
+    "RequestOutput", "SamplingParams", "SpecConfig", "SpecDecoder",
     "Request", "Scheduler", "SchedulerConfig", "StaticBatchScheduler",
     "StepClock", "run_open_loop", "run_closed_loop", "synth_traffic",
     "synth_shared_prefix_traffic",

@@ -86,6 +86,34 @@ passed** — ``add_request``/``finish_prefill`` with ``temperature > 0``
 and no ``key`` fall back to greedy argmax *with an explicit
 ``UserWarning``* (``step`` applies the same key-gated rule silently,
 since it is called once per token; pass ``key=`` everywhere to sample).
+Exception: a request with ``SamplingParams.seed`` set derives its lane
+keys from its own seed (``fold_in(PRNGKey(seed), event_counter)`` inside
+the executable) and therefore samples even without a per-step key — and
+reproducibly, independent of slot placement and co-batched traffic.
+
+Request API (``repro.serving.params``): per-request knobs enter through
+``SamplingParams`` — ``add_request(prompt, params=...)`` /
+``begin_request(prompt, params=...)`` — covering temperature, seed,
+eos_id, max_tokens (enforced here: the lane frees itself with finish
+reason ``"length"``) and the speculative ``spec_k``. The legacy
+``eos_id=`` kwarg is still accepted for one release under a
+``DeprecationWarning`` and behaves bit-identically. ``StepResult`` still
+quacks like the old slot->token dict, but carries a typed
+``outputs`` list of per-request ``RequestOutput`` records
+(tokens-this-step, finished, finish_reason, lazy pJ/token).
+
+Speculative seams (``repro.serving.speculative`` is the orchestrator;
+the design note lives there): ``spec_snapshot``/``spec_restore`` capture
+and lane-mask-restore the rollback-sensitive cache subtrees (local-attn
+rings + RG-LRU/SSM recurrent states — global-attn KV needs none, stale
+rows stay causally masked until overwritten), ``draft_step`` is one
+greedy decode dispatch of a cheap same-weights draft arch against the
+shared cache, ``verify_chunk`` reuses the *existing* bucketed prefill
+executables as the exact greedy verifier (``prefill_step`` returns
+per-position argmax ids precisely for this — zero new compiles),
+``verify_chunk_sampled`` runs the rejection-rule acceptance on device,
+and ``repair_chunk`` re-feeds the accepted prefix after a restore
+(no fetch — acceptance already knows the tokens).
 """
 from __future__ import annotations
 
@@ -100,31 +128,38 @@ import numpy as np
 
 from repro.configs.base import ArchConfig
 from repro.core import costs
-from repro.models import decode_step, init_cache, prefill_step
+from repro.models import decode_step, forward, init_cache, prefill_step
+from repro.serving.params import RequestOutput, SamplingParams
 from repro.serving.prefix_cache import (
     PrefixCache,
     restore_slot,
     snapshot_slot,
 )
 
-__all__ = ["ServeConfig", "Engine", "StepResult", "energy_report"]
+__all__ = ["ServeConfig", "Engine", "StepResult", "SamplingParams",
+           "RequestOutput", "energy_report"]
 
 
 class StepResult(dict):
-    """``Engine.step`` result: slot id -> sampled token (dict, as before),
-    plus ``finished`` — the slot ids freed this step (per-slot EOS or
-    context exhaustion), in ascending slot order — and ``pj_per_token``,
-    the decode-phase CIM energy per generated token (None when the arch
-    serves without the CIM path). The energy is resolved lazily on first
-    access (a thunk into ``Engine.energy_per_token``'s memo), so the
-    decode hot path never pays the trace/ENOB solve for callers that
-    don't read it. A finished slot is immediately claimable by
-    ``add_request``."""
+    """``Engine.step`` result: slot id -> last sampled token (dict, as
+    before), plus ``finished`` — the slot ids freed this step (per-slot
+    EOS, ``max_tokens``, or context exhaustion), in ascending slot order —
+    ``outputs`` — a typed ``RequestOutput`` per live request, carrying
+    *all* tokens emitted this step (speculative steps emit several) and
+    the finish reason — and ``pj_per_token``, the decode-phase CIM energy
+    per generated token (None when the arch serves without the CIM path).
+    The energy is resolved lazily on first access (a thunk into
+    ``Engine.energy_per_token``'s memo), so the decode hot path never
+    pays the trace/ENOB solve for callers that don't read it. A finished
+    slot is immediately claimable by ``add_request``."""
 
     def __init__(self, tokens: dict, finished: List[int],
-                 energy_fn: Optional[callable] = None):
+                 energy_fn: Optional[callable] = None,
+                 outputs: Optional[List[RequestOutput]] = None):
         super().__init__(tokens)
         self.finished = finished
+        self.outputs: List[RequestOutput] = outputs if outputs is not None \
+            else []
         self._energy_fn = energy_fn
 
     @property
@@ -154,19 +189,44 @@ def _merge_cache(old, new, mask):
     return out
 
 
+def _lane_keys(key, seeds, ctrs):
+    """Per-lane sampling keys: unseeded lanes split the caller's per-step
+    key (the legacy stream, bit-identical when no lane is seeded); a lane
+    with ``seeds[i] >= 0`` instead derives ``fold_in(PRNGKey(seed), ctr)``
+    from its own seed and per-lane sampling-event counter — a stream that
+    is a pure function of (seed, event index), independent of slot
+    placement, batch composition and the caller's key."""
+    base = jax.random.split(key, seeds.shape[0])
+
+    def pick(bk, seed, ctr):
+        sk = jax.random.fold_in(jax.random.PRNGKey(jnp.maximum(seed, 0)),
+                                ctr)
+        return jnp.where(seed >= 0, sk, bk)
+
+    return jax.vmap(pick)(base, seeds, ctrs)
+
+
 def _decode_raw(arch: ArchConfig, sample: bool):
     """The unjitted fused decode-step body (forward + active-mask cache
     merge + token selection). Exposed separately from ``_decode_fn`` so the
     invariant harness (``repro.analysis.invariants``) can wrap it in a
-    compile counter before jitting — same function, same trace."""
-    def fn(params, toks, cache, lengths, active, key, temp):
+    compile counter before jitting — same function, same trace.
+
+    ``temp`` is a per-lane (B,) float32 vector (mixed greedy/sampled
+    batches: a lane with ``temp <= 0`` takes the argmax even in the
+    sampled executable); ``seeds``/``ctrs`` are the per-lane (B,) int32
+    seed (-1 = unseeded) and sampling-event counter feeding
+    ``_lane_keys``. With every lane unseeded and a uniform temperature
+    this reproduces the legacy scalar-temperature stream bit-for-bit."""
+    def fn(params, toks, cache, lengths, active, key, temp, seeds, ctrs):
         logits, new_cache = decode_step(params, toks, arch, cache, lengths)
         merged = _merge_cache(cache, new_cache, active)
         if sample:
-            keys = jax.random.split(key, logits.shape[0])
+            keys = _lane_keys(key, seeds, ctrs)
             nxt = jax.vmap(
-                lambda k, lg: jax.random.categorical(k, lg / temp))(
-                    keys, logits)
+                lambda k, lg, tt: jax.random.categorical(
+                    k, lg / jnp.maximum(tt, 1e-6)))(keys, logits, temp)
+            nxt = jnp.where(temp > 0, nxt, jnp.argmax(logits, axis=-1))
         else:
             nxt = jnp.argmax(logits, axis=-1)
         return nxt.astype(jnp.int32), merged
@@ -203,6 +263,82 @@ def _prefill_fn(arch: ArchConfig, bucket: int):
     shared by every Engine. Buckets are powers of two (see
     ``Engine._bucket``), so the cache stays O(log max_ctx) per arch."""
     return jax.jit(_prefill_raw(arch, bucket))
+
+
+def _verify_raw(arch: ArchConfig, bucket: int):
+    """Sampled-acceptance speculative verify for one bucket length: a
+    chunked prefill over ``[pending, d_1 .. d_{k-1}]`` plus the standard
+    speculative rejection rule, entirely on device.
+
+    Drafts here are *greedy* proposals (the draft model's argmax), i.e. a
+    delta proposal distribution, so the textbook accept-with-prob
+    ``min(1, p/q)`` reduces to: accept ``d_j`` with probability
+    ``p(d_j)`` under the target distribution at that position; on the
+    first rejection resample from ``p`` with the rejected token's mass
+    zeroed out (the renormalized residual ``max(0, p - q)``), and when
+    every draft survives sample the bonus token from the target's next
+    distribution — unbiased w.r.t. sequential sampling (distribution-,
+    not bit-, identical; see serving/speculative.py). Lanes with
+    ``temp <= 0`` fall back to exact greedy acceptance, so mixed batches
+    work. Returns a packed ``(B, S + 1)`` int32 array — emitted tokens
+    (accepted drafts then the correction/bonus) followed by the per-lane
+    emitted count — one fetch — plus the new cache.
+    """
+    del bucket  # shapes carry the bucket; the key just partitions the cache
+
+    def fn(params, toks, cache, index, lens, key, temp, seeds, ctrs):
+        b, s = toks.shape
+        idx = jnp.broadcast_to(jnp.asarray(index), (b,))
+        lens_b = jnp.broadcast_to(jnp.asarray(lens), (b,))
+        positions = idx[:, None] + jnp.arange(s)[None, :]
+        logits, _, new_cache = forward(
+            params, toks, arch, cache=cache, cache_index=idx,
+            positions=positions, chunk_lengths=lens_b)
+        greedy = jnp.argmax(logits, axis=-1).astype(jnp.int32)   # (B, S)
+        # position j verifies draft toks[:, j+1] (last column is junk and
+        # masked off by draft_pos below)
+        nxt = jnp.concatenate([toks[:, 1:], toks[:, :1]], axis=1)
+        tt = jnp.maximum(temp, 1e-6)[:, None]                    # (B, 1)
+        p = jax.nn.softmax(logits.astype(jnp.float32) / tt[..., None],
+                           axis=-1)
+        q = jnp.take_along_axis(p, nxt[..., None], axis=-1)[..., 0]
+        keys = _lane_keys(key, seeds, ctrs)
+        ks = jax.vmap(lambda k: jax.random.split(k, 2))(keys)
+        u = jax.vmap(lambda k: jax.random.uniform(k, (s,)))(ks[:, 0])
+        acc = jnp.where((temp > 0)[:, None], u < q, nxt == greedy)
+        jj = jnp.arange(s)[None, :]
+        draft_pos = jj < (lens_b[:, None] - 1)
+        run = jnp.cumprod(
+            jnp.where(draft_pos, acc, True).astype(jnp.int32), axis=1)
+        m = jnp.sum(run * draft_pos.astype(jnp.int32), axis=1)   # (B,)
+        # final token at position m: correction (resample with the
+        # rejected draft zeroed) or bonus (full target distribution)
+        row = jnp.take_along_axis(logits, m[:, None, None], axis=1)[:, 0, :]
+        row_greedy = jnp.argmax(row, axis=-1).astype(jnp.int32)
+        rejected = m < (lens_b - 1)
+        d_rej = jnp.take_along_axis(nxt, m[:, None], axis=1)[:, 0]
+        row_f = row.astype(jnp.float32) / jnp.maximum(temp, 1e-6)[:, None]
+        vocab = jnp.arange(row.shape[-1])[None, :]
+        row_f = jnp.where(rejected[:, None] & (vocab == d_rej[:, None]),
+                          jnp.asarray(-1e30, row_f.dtype), row_f)
+        cand = jax.vmap(jax.random.categorical)(ks[:, 1],
+                                                row_f).astype(jnp.int32)
+        final = jnp.where(temp > 0, cand, row_greedy)
+        emitted = jnp.where(jj < m[:, None], nxt, 0)
+        emitted = jnp.where(jj == m[:, None], final[:, None], emitted)
+        packed = jnp.concatenate(
+            [emitted, (m + 1).astype(jnp.int32)[:, None]], axis=1)
+        return packed, new_cache
+
+    return fn
+
+
+@functools.lru_cache(maxsize=256)
+def _verify_fn(arch: ArchConfig, bucket: int):
+    """One compiled sampled-verify executable per (arch, bucket length) —
+    only ever compiled when speculative decode runs with sampling (the
+    greedy acceptance path reuses ``_prefill_fn`` outright)."""
+    return jax.jit(_verify_raw(arch, bucket))
 
 
 @dataclasses.dataclass
@@ -257,6 +393,18 @@ class Engine:
         self._last_host = np.zeros(cfg.batch_slots, np.int32)
         # per-slot EOS id (-1: none); seeded from cfg.eos_id per request
         self._eos = np.full(cfg.batch_slots, -1, np.int64)
+        # per-slot SamplingParams state (seeded at begin_request):
+        # temperature, PRNG seed (-1 unseeded) + sampling-event counter,
+        # generated-token cap (-1 unlimited) + emitted count, spec_k
+        # (-1: decoder default), and the terminal finish reason
+        self._temp = np.full(cfg.batch_slots, cfg.temperature, np.float32)
+        self._seed = np.full(cfg.batch_slots, -1, np.int64)
+        self._ctr = np.zeros(cfg.batch_slots, np.int64)
+        self._max_toks = np.full(cfg.batch_slots, -1, np.int64)
+        self._emitted = np.zeros(cfg.batch_slots, np.int64)
+        self._spec_k = np.full(cfg.batch_slots, -1, np.int64)
+        self._finish_reason: List[Optional[str]] = \
+            [None] * cfg.batch_slots
         # slots that have hosted a request (their cache state is dirty and
         # must be zeroed before reuse)
         self._dirty = np.zeros(cfg.batch_slots, bool)
@@ -296,7 +444,14 @@ class Engine:
         # prefill_tokens counts prompt tokens actually dispatched (suffix
         # only, under hits) — the CostLedger's prefill energy multiplier
         self.stats = {"prefill_dispatches": 0, "decode_steps": 0,
-                      "prefill_tokens": 0, "prefix_hit_tokens": 0}
+                      "prefill_tokens": 0, "prefix_hit_tokens": 0,
+                      # speculative-decode counters (speculative.py):
+                      # dispatches by kind, iterations, and tokens
+                      # emitted through spec steps (accepted incl. the
+                      # correction/bonus token)
+                      "draft_dispatches": 0, "verify_dispatches": 0,
+                      "repair_dispatches": 0, "spec_steps": 0,
+                      "spec_tokens": 0}
 
     # ------------------------------------------------------- compiled fns
     # Per-engine indirection over the shared executable caches: the single
@@ -308,6 +463,16 @@ class Engine:
 
     def _compiled_prefill(self, bucket: int):
         return _prefill_fn(self.arch, bucket)
+
+    def _compiled_draft(self, draft_arch: ArchConfig):
+        # the draft is a plain greedy decode of the (cheap) draft arch
+        # over the SAME weights and cache — when draft_arch == self.arch
+        # this is literally the serving decode executable (zero new
+        # compiles); otherwise it is the draft arch's one decode compile
+        return _decode_fn(draft_arch, False)
+
+    def _compiled_verify(self, bucket: int):
+        return _verify_fn(self.arch, bucket)
 
     @staticmethod
     def _snapshot(host_state: np.ndarray) -> jax.Array:
@@ -322,10 +487,32 @@ class Engine:
         """
         return jnp.asarray(host_state.copy())
 
+    # ------------------------------------------------------------ params
+    @staticmethod
+    def _resolve_params(eos_id: Optional[int],
+                        params: Optional[SamplingParams],
+                        stacklevel: int = 4) -> SamplingParams:
+        """Fold the legacy ``eos_id=`` kwarg into ``SamplingParams`` (one
+        release of ``DeprecationWarning``; passing both is an error).
+        ``params=None`` with no legacy kwargs is the silent default."""
+        if params is None:
+            if eos_id is not None:
+                warnings.warn(
+                    "eos_id= is deprecated: pass "
+                    "params=SamplingParams(eos_id=...) instead (the "
+                    "behavior is identical)", DeprecationWarning,
+                    stacklevel=stacklevel)
+            return SamplingParams(eos_id=eos_id)
+        if eos_id is not None:
+            raise ValueError(
+                "pass eos_id via SamplingParams, not alongside params=")
+        return params
+
     # ------------------------------------------------------------ prefill
     def add_request(self, prompt: List[int],
                     eos_id: Optional[int] = None,
-                    key: Optional[jax.Array] = None) -> int:
+                    key: Optional[jax.Array] = None, *,
+                    params: Optional[SamplingParams] = None) -> int:
         """Prefill a free slot, sample the first output token from the
         prefill logits, and return the slot id.
 
@@ -344,19 +531,23 @@ class Engine:
         that hits the request's EOS finishes the request immediately (the
         slot never joins the decode batch and is free to reuse).
 
-        ``eos_id`` overrides ``cfg.eos_id`` for this request: the lane is
-        freed as soon as it emits that token (the EOS itself is kept in
-        ``tokens``), making the slot claimable by the next ``add_request``.
+        ``params`` (``SamplingParams``) is the request-level entry point:
+        temperature / seed / eos_id / max_tokens / spec_k, each ``None``
+        field inheriting the engine default. The positional ``eos_id``
+        kwarg is the deprecated legacy spelling (one release of
+        ``DeprecationWarning``; identical behavior).
 
         Sampling: with ``temperature > 0`` the first token is sampled
         **only when** ``key`` is passed; ``temperature > 0`` without a
         key falls back to greedy argmax with a ``UserWarning`` (the
         explicit form of what used to happen silently — ``step`` applies
-        the same key-gated rule).
+        the same key-gated rule). A request with ``params.seed`` set
+        samples from its own seeded stream, no per-step key needed.
         """
-        slot = self.begin_request(prompt, eos_id=eos_id)
+        params = self._resolve_params(eos_id, params)
+        slot = self.begin_request(prompt, params=params)
         if self.cfg.prefill_mode == "token":
-            sample = self._resolve_sampling(key)
+            sample = self._resolve_sampling(key, slot)
             self._pending_prompt.pop(slot, None)
             for t in prompt[:-1]:
                 self._advance_slot(slot, t)
@@ -372,14 +563,18 @@ class Engine:
 
     # ------------------------------------------------- incremental prefill
     def begin_request(self, prompt: List[int],
-                      eos_id: Optional[int] = None) -> int:
+                      eos_id: Optional[int] = None, *,
+                      params: Optional[SamplingParams] = None) -> int:
         """Claim and validate a free slot for ``prompt`` without running
         any prefill: the lane is *reserved* (``free_slots`` excludes it)
         but not yet in the decode batch. The scheduler drains the prompt
         through ``advance_prefill`` between decode steps and activates the
         lane with ``finish_prefill``; ``add_request`` is the blocking
         begin → advance-until-drained → finish composition of the same
-        methods."""
+        methods. ``params`` seeds the lane's per-request state (see
+        ``add_request``); the ``eos_id`` kwarg is the deprecated legacy
+        spelling."""
+        params = self._resolve_params(eos_id, params)
         if not prompt:
             raise ValueError("empty prompt")
         if len(prompt) >= self.cfg.max_ctx:
@@ -402,8 +597,19 @@ class Engine:
         self._prefilling[slot] = True
         self._pending_prompt[slot] = list(prompt)
         self._pending_logits.pop(slot, None)
-        eos = eos_id if eos_id is not None else self.cfg.eos_id
+        eos = params.eos_id if params.eos_id is not None else self.cfg.eos_id
         self._eos[slot] = -1 if eos is None else int(eos)
+        self._temp[slot] = (self.cfg.temperature
+                            if params.temperature is None
+                            else params.temperature)
+        self._seed[slot] = -1 if params.seed is None else int(params.seed)
+        self._ctr[slot] = 0
+        self._max_toks[slot] = (-1 if params.max_tokens is None
+                                else int(params.max_tokens))
+        self._emitted[slot] = 0
+        self._spec_k[slot] = (-1 if params.spec_k is None
+                              else int(params.spec_k))
+        self._finish_reason[slot] = None
         self._adopted[slot] = 0
         if self.prefix_cache is not None:
             hit = self.prefix_cache.lookup(prompt)
@@ -478,7 +684,7 @@ class Engine:
             raise RuntimeError(
                 f"slot {slot}: {self.prefill_remaining(slot)} prompt "
                 "tokens still pending — drain with advance_prefill first")
-        sample = self._resolve_sampling(key)
+        sample = self._resolve_sampling(key, slot)
         logits = self._pending_logits.pop(slot)
         del self._pending_prompt[slot]
         first = self._select_token(logits, slot, sample, key)
@@ -488,16 +694,29 @@ class Engine:
     def _adopt_first_token(self, slot: int, first: int) -> None:
         """Shared end-of-prefill bookkeeping: record the first generated
         token and either join the decode batch or finish at once (first
-        token == EOS: the slot never joins a decode batch, so the
-        completion is surfaced through the next ``StepResult.finished``)."""
+        token == EOS, or ``max_tokens == 1``: the slot never joins a
+        decode batch, so the completion is surfaced through the next
+        ``StepResult.finished``)."""
         self.tokens[slot].append(first)
         self._last_host[slot] = first
         self._prefilling[slot] = False
+        self._emitted[slot] = 1
         if self._eos[slot] >= 0 and first == self._eos[slot]:
             self.active[slot] = False
+            self._finish_reason[slot] = "eos"
+            self._pending_finished.append(slot)
+        elif 0 <= self._max_toks[slot] <= 1:
+            self.active[slot] = False
+            self._finish_reason[slot] = "length"
             self._pending_finished.append(slot)
         else:
             self.active[slot] = True
+
+    def finish_reason(self, slot: int) -> Optional[str]:
+        """Terminal reason recorded when the engine froze the lane
+        (``"eos"`` / ``"length"`` / ``"ctx"``); None while live or when
+        the slot was freed externally (``release_slot``)."""
+        return self._finish_reason[slot]
 
     def release_slot(self, slot: int) -> None:
         """Free a lane regardless of progress — the scheduler's stop seam
@@ -514,33 +733,72 @@ class Engine:
         (neither decoding nor mid-prefill) — the admission-control count."""
         return int(np.sum(~self.active & ~self._prefilling))
 
-    def _resolve_sampling(self, key: Optional[jax.Array]) -> bool:
-        """The engine-wide sampling rule: sample iff ``temperature > 0``
-        AND a key was passed. The no-key fallback to greedy is explicit
-        here (satellite of the scheduler PR): it warns instead of silently
+    def _resolve_sampling(self, key: Optional[jax.Array],
+                          slot: int) -> bool:
+        """The per-request sampling rule: sample iff the slot's
+        temperature is ``> 0`` AND entropy is available — a per-call key,
+        or the request's own ``SamplingParams.seed``. The no-key no-seed
+        fallback to greedy is explicit: it warns instead of silently
         diverging from what a ``temperature > 0`` caller expects."""
-        if self.cfg.temperature <= 0:
+        if self._temp[slot] <= 0:
             return False
+        if self._seed[slot] >= 0:
+            return True
         if key is None:
             warnings.warn(
                 "temperature > 0 but no PRNG key passed: falling back to "
                 "greedy argmax for this token. Pass key= to sample "
-                "(Engine.step applies the same key-gated rule).",
+                "(Engine.step applies the same key-gated rule), or set "
+                "SamplingParams.seed for a self-seeded request.",
                 UserWarning, stacklevel=3)
             return False
         return True
 
+    def _effective_temps(self, key: Optional[jax.Array]) -> np.ndarray:
+        """Per-lane temperatures actually in effect for one sampling
+        event: a lane samples iff its temperature is positive AND it has
+        entropy (the caller's key, or its own seed) — lanes without are
+        clamped to 0 (argmax) inside the sampled executable."""
+        if key is not None:
+            return self._temp.astype(np.float32)
+        return np.where(self._seed >= 0, self._temp, 0.0).astype(np.float32)
+
+    def _sampling_args(self, key: Optional[jax.Array],
+                       eff: np.ndarray) -> tuple:
+        """The (key, temp, seeds, ctrs) tail of every sampled executable
+        call, snapshotted against async mutation like ``_snapshot``."""
+        return (key if key is not None else jax.random.PRNGKey(0),
+                jnp.asarray(eff.copy()),
+                jnp.asarray(self._seed.astype(np.int32)),
+                jnp.asarray(self._ctr.astype(np.int32)))
+
+    def _count_sampling_event(self, eff: np.ndarray,
+                              lanes: np.ndarray) -> None:
+        """Advance the sampling-event counter of every seeded lane that
+        just consumed randomness (its stream is ``fold_in(seed, ctr)``
+        per event, so placement and co-traffic can never perturb it)."""
+        self._ctr[lanes & (eff > 0) & (self._seed >= 0)] += 1
+
     def _select_token(self, logits_dev: jax.Array, slot: int,
                       sample: bool, key: Optional[jax.Array]) -> int:
         """Token selection over prefill logits (B, V), mirroring the fused
-        decode's math exactly (per-lane key split + categorical / argmax)
-        so token-mode and bucketed-mode prefill stay equivalent. Routed
-        through ``_fetch`` — the engine's single transfer point."""
+        decode's math exactly (per-lane keys + categorical / argmax with
+        per-lane temperatures) so token-mode and bucketed-mode prefill
+        stay equivalent. Routed through ``_fetch`` — the engine's single
+        transfer point."""
         if sample:
-            keys = jax.random.split(key, logits_dev.shape[0])
+            eff = self._effective_temps(key)
+            k, temps, seeds, ctrs = self._sampling_args(key, eff)
+            keys = _lane_keys(k, seeds, ctrs)
             ids = jax.vmap(
-                lambda k, lg: jax.random.categorical(
-                    k, lg / self.cfg.temperature))(keys, logits_dev)
+                lambda kk, lg, tt: jax.random.categorical(
+                    kk, lg / jnp.maximum(tt, 1e-6)))(keys, logits_dev,
+                                                     temps)
+            ids = jnp.where(jnp.asarray(eff) > 0, ids,
+                            jnp.argmax(logits_dev, axis=-1))
+            lane = np.zeros(self.cfg.batch_slots, bool)
+            lane[slot] = True
+            self._count_sampling_event(eff, lane)
         else:
             ids = jnp.argmax(logits_dev, axis=-1)
         return int(self._fetch(ids.astype(jnp.int32))[slot])
@@ -583,7 +841,7 @@ class Engine:
         lens = np.zeros(self.cfg.batch_slots, np.int32)
         lens[slot] = len(chunk)
         fill = self._compiled_prefill(bucket)
-        logits, self.cache = fill(
+        logits, _, self.cache = fill(
             self.params, jnp.asarray(toks), self.cache,
             self._snapshot(self.lengths), jnp.asarray(lens))
         self.lengths[slot] += len(chunk)
@@ -601,11 +859,14 @@ class Engine:
         toks[slot, 0] = token
         mask = np.zeros(self.cfg.batch_slots, bool)
         mask[slot] = True
+        eff = self._effective_temps(key) if sample else \
+            np.zeros(self.cfg.batch_slots, np.float32)
         ids, self.cache = self._compiled_decode(sample)(
             self.params, jnp.asarray(toks), self.cache,
             self._snapshot(self.lengths), jnp.asarray(mask),
-            key if key is not None else jax.random.PRNGKey(0),
-            float(self.cfg.temperature) if sample else 1.0)
+            *self._sampling_args(key, eff))
+        if sample:
+            self._count_sampling_event(eff, mask)
         self.lengths[slot] += 1
         self.stats["prefill_dispatches"] += 1
         self.stats["prefill_tokens"] += 1
@@ -631,17 +892,20 @@ class Engine:
         completed during ``add_request`` itself (first prefill-sampled
         token == EOS) are reported here too, ahead of this step's frees.
         """
-        pending, self._pending_finished = self._pending_finished, []
+        pending, outputs = self._drain_pending()
         if not self.active.any():
-            return StepResult({}, pending, self._pj_per_token)
-        sample = self.cfg.temperature > 0 and key is not None
+            return StepResult({}, pending, self._pj_per_token,
+                              outputs=outputs)
+        eff = self._effective_temps(key)
+        sample = bool((eff[self.active] > 0).any())
         fn = self._compiled_decode(sample)
         ids_dev, self.cache = fn(
             self.params, self._snapshot(self._last_host[:, None]),
             self.cache, self._snapshot(self.lengths),
             self._snapshot(self.active),
-            key if key is not None else jax.random.PRNGKey(0),
-            float(self.cfg.temperature) if sample else 1.0)
+            *self._sampling_args(key, eff))
+        if sample:
+            self._count_sampling_event(eff, self.active)
         ids = self._fetch(ids_dev)
         act = np.where(self.active)[0]
         out = {}
@@ -651,15 +915,177 @@ class Engine:
             out[int(s)] = t
         self._last_host[act] = ids[act]
         self.lengths[act] += 1
-        # Per-slot completion: emitted EOS, or no context left for another
-        # decode write. Either way the slot leaves the active mask (its
-        # cache freezes in the next fused decode) and is free to reuse.
+        self._emitted[act] += 1
+        # Per-slot completion: emitted EOS, hit the request's max_tokens,
+        # or no context left for another decode write. Either way the slot
+        # leaves the active mask (its cache freezes in the next fused
+        # decode) and is free to reuse.
         hit_eos = (self._eos >= 0) & (self._last_host == self._eos)
-        done = self.active & (hit_eos | (self.lengths >= self.cfg.max_ctx))
+        maxed = (self._max_toks >= 0) & (self._emitted >= self._max_toks)
+        done = self.active & (hit_eos | maxed
+                              | (self.lengths >= self.cfg.max_ctx))
+        for s in act:
+            reason = None
+            if done[s]:
+                reason = ("eos" if hit_eos[s]
+                          else "length" if maxed[s] else "ctx")
+                self._finish_reason[s] = reason
+            outputs.append(RequestOutput(
+                slot=int(s), tokens=[out[int(s)]], finished=bool(done[s]),
+                finish_reason=reason, _energy_fn=self._pj_per_token))
         finished = pending + [int(s) for s in np.where(done)[0]]
         self.active[done] = False
         self.stats["decode_steps"] += 1
-        return StepResult(out, finished, self._pj_per_token)
+        return StepResult(out, finished, self._pj_per_token,
+                          outputs=outputs)
+
+    def _drain_pending(self):
+        """Pop completions recorded outside ``step`` (first prefill token
+        hit EOS / a one-token ``max_tokens`` cap) as (slot ids, their
+        token-less ``RequestOutput`` records)."""
+        pending, self._pending_finished = self._pending_finished, []
+        outputs = [RequestOutput(slot=s, tokens=[], finished=True,
+                                 finish_reason=self._finish_reason[s],
+                                 _energy_fn=self._pj_per_token)
+                   for s in pending]
+        return pending, outputs
+
+    # ------------------------------------------------- speculative seams
+    # Orchestrated by repro.serving.speculative.SpecDecoder; kept on the
+    # engine because they touch cache/state internals and must flow
+    # through the instrumented _compiled_*/_fetch seams.
+
+    _SPEC_STATE_KINDS = ("local", "rglru", "ssm")
+
+    def spec_snapshot(self) -> dict:
+        """References to the rollback-sensitive cache subtrees, whole
+        batch: local-attn ring buffers (drafting overwrites ring slots
+        that alias *valid older* positions) and RG-LRU/SSM recurrent +
+        conv states (mutated by every pass). jax arrays are immutable and
+        dispatches REPLACE ``self.cache`` leaves, so this is O(1)
+        bookkeeping — no copy, no transfer. Global-attn KV needs no
+        snapshot: rows past a lane's committed length are causally masked
+        (decode: ``slot <= idx``; prefill: ``q_pos >= k_pos``) and are
+        positionally overwritten before the length ever reaches them, so
+        draft/verify pollution there is invisible by construction. An
+        empty dict therefore means the arch is rollback-free."""
+        snap = {}
+        for group in ("superblocks", "tail"):
+            g = self.cache.get(group)
+            if not g:
+                continue
+            kept = {name: layer for name, layer in g.items()
+                    if name.split("_", 1)[1] in self._SPEC_STATE_KINDS}
+            if kept:
+                snap[group] = kept
+        return snap
+
+    def spec_restore(self, snap: dict, lanes: np.ndarray) -> None:
+        """Restore a ``spec_snapshot`` into the lanes where ``lanes`` is
+        True (device-side per-lane where-merge, same layout rules as
+        ``_merge_cache``); other lanes keep their current state. Free of
+        device→host traffic — the merge rides into the next dispatch."""
+        if not snap:
+            return
+        mask = jnp.asarray(lanes.copy())
+
+        def mrg(axis):
+            def f(cur, old):
+                shape = [1] * cur.ndim
+                shape[axis] = -1
+                return jnp.where(jnp.reshape(mask, shape), old, cur)
+            return f
+
+        out = dict(self.cache)
+        for group, axis in (("superblocks", 1), ("tail", 0)):
+            if group not in snap:
+                continue
+            newg = dict(out[group])
+            for name, layer in snap[group].items():
+                newg[name] = jax.tree.map(mrg(axis), newg[name], layer)
+            out[group] = newg
+        self.cache = out
+
+    def draft_step(self, draft_arch: ArchConfig, cur: np.ndarray,
+                   mask: np.ndarray, offsets: np.ndarray) -> np.ndarray:
+        """One greedy draft decode dispatch of ``draft_arch`` (same
+        weights, shared cache) for the lanes in ``mask``, feeding token
+        ``cur[i]`` at cache offset ``offsets[i]``. Non-mask lanes are
+        frozen by the in-executable merge exactly like inactive decode
+        lanes. Returns the drafted ids (one fetch)."""
+        toks = np.zeros((self.cfg.batch_slots, 1), np.int32)
+        toks[mask, 0] = cur[mask]
+        zero = np.zeros(self.cfg.batch_slots, np.float32)
+        ids_dev, self.cache = self._compiled_draft(draft_arch)(
+            self.params, jnp.asarray(toks), self.cache,
+            self._snapshot(offsets.astype(np.int32)),
+            jnp.asarray(mask.copy()), *self._sampling_args(None, zero))
+        self.stats["draft_dispatches"] += 1
+        return self._fetch(ids_dev)
+
+    def verify_chunk(self, chunk: np.ndarray,
+                     lens: np.ndarray) -> np.ndarray:
+        """Exact greedy verification of ``chunk`` — per lane
+        ``[pending_token, d_1 .. d_{k-1}]`` with ``lens`` valid entries
+        (0 freezes the lane bitwise) — through the *existing* bucketed
+        prefill executable: ``prefill_step`` already returns per-position
+        argmax ids, so the verifier costs zero new compiles. Returns the
+        (B, bucket) target ids (one fetch); the host keeps the longest
+        draft prefix matching them. Lengths are NOT committed here — the
+        orchestrator commits only accepted tokens."""
+        b, k = chunk.shape
+        bucket = self._bucket(k)
+        toks = np.zeros((b, bucket), np.int32)
+        toks[:, :k] = chunk
+        _, ids_dev, self.cache = self._compiled_prefill(bucket)(
+            self.params, jnp.asarray(toks), self.cache,
+            self._snapshot(self.lengths),
+            jnp.asarray(lens.astype(np.int32).copy()))
+        self.stats["verify_dispatches"] += 1
+        return self._fetch(ids_dev)[:, :k]
+
+    def verify_chunk_sampled(self, chunk: np.ndarray, lens: np.ndarray,
+                             key: Optional[jax.Array]):
+        """Rejection-rule verification of ``chunk`` under per-lane
+        temperatures (``_verify_raw`` carries the acceptance math and the
+        unbiasedness argument). Returns ``(emitted, counts)`` — emitted
+        tokens (B, bucket) with ``counts[i]`` valid entries per lane —
+        from the packed single fetch. Lanes with ``temp <= 0`` get exact
+        greedy acceptance, so mixed batches verify in one dispatch."""
+        b, k = chunk.shape
+        bucket = self._bucket(k)
+        toks = np.zeros((b, bucket), np.int32)
+        toks[:, :k] = chunk
+        eff = self._effective_temps(key)
+        packed_dev, self.cache = self._compiled_verify(bucket)(
+            self.params, jnp.asarray(toks), self.cache,
+            self._snapshot(self.lengths),
+            jnp.asarray(lens.astype(np.int32).copy()),
+            *self._sampling_args(key, eff))
+        self._count_sampling_event(eff, lens > 0)
+        self.stats["verify_dispatches"] += 1
+        packed = self._fetch(packed_dev)
+        return packed[:, :k], packed[:, bucket]
+
+    def repair_chunk(self, chunk: np.ndarray, lens: np.ndarray,
+                     index: np.ndarray) -> None:
+        """Partial-acceptance repair: after ``spec_restore`` rolled the
+        rollback-sensitive state of partially-accepted lanes back to the
+        pre-draft snapshot, re-feed each such lane's *accepted* prefix
+        (``lens[i]`` leading tokens of ``chunk``, 0 = frozen) at its
+        pre-verify offset ``index``. Same bucket executable as the
+        verify; logits and ids are discarded on device — acceptance
+        already knows every token, so repair adds NO fetch (the invariant
+        ``run_spec_invariants`` checks)."""
+        b, k = chunk.shape
+        bucket = self._bucket(k)
+        toks = np.zeros((b, bucket), np.int32)
+        toks[:, :k] = chunk
+        _, _, self.cache = self._compiled_prefill(bucket)(
+            self.params, jnp.asarray(toks), self.cache,
+            self._snapshot(index.astype(np.int32)),
+            jnp.asarray(lens.astype(np.int32).copy()))
+        self.stats["repair_dispatches"] += 1
 
     # ------------------------------------------------------------ energy
     def energy_per_token(self) -> Optional[dict]:
@@ -682,8 +1108,11 @@ class Engine:
 
     @staticmethod
     def _fetch(ids_dev: jax.Array) -> np.ndarray:
-        """The single device→host transfer per decode step (and per
-        prefill first-token selection): a (batch_slots,) int32 id array."""
+        """The single device→host transfer per compiled dispatch that
+        needs one: a (batch_slots,) int32 id array per decode/draft step
+        and prefill first-token selection, or a (batch_slots, bucket[+1])
+        int32 array per speculative verify. Repair dispatches cross
+        nothing."""
         return np.asarray(ids_dev)
 
 

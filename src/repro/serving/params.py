@@ -1,0 +1,94 @@
+"""Request-level serving API types: ``SamplingParams`` and
+``RequestOutput``.
+
+``SamplingParams`` is the single way per-request knobs enter the system —
+``Engine.add_request``/``begin_request`` and ``Scheduler.submit`` accept
+one instead of scattered kwargs (the legacy ``eos_id=``/
+``max_new_tokens=`` kwargs are still accepted for one release under a
+``DeprecationWarning`` and are converted to an equivalent
+``SamplingParams``, bit-identically — tested in
+tests/test_sampling_params.py).
+
+Every field defaults to "inherit the engine/scheduler default", so
+``SamplingParams()`` is always a valid no-op:
+
+* ``temperature`` — per-request sampling temperature; ``None`` inherits
+  ``ServeConfig.temperature``. ``0.0`` forces greedy argmax for this
+  request even inside a sampled batch (the fused decode applies
+  temperatures per lane).
+* ``seed`` — per-request PRNG seed. A seeded request derives its lane
+  key as ``fold_in(PRNGKey(seed), event_counter)`` inside the decode
+  executable, so its sampled stream is reproducible regardless of which
+  slot it lands in or what other traffic shares the batch (the unseeded
+  path splits the caller's per-step key across lanes, as before).
+  Seeded requests sample even when the caller passes no per-step key.
+* ``eos_id`` — per-request stop token; ``None`` inherits
+  ``ServeConfig.eos_id``.
+* ``max_tokens`` — cap on *generated* tokens (including the
+  prefill-sampled first one). Enforced inside the engine: the lane is
+  freed with finish reason ``"length"`` the step it reaches the cap.
+  ``None`` decodes until EOS / context exhaustion.
+* ``spec_k`` — speculative-decode lookahead for this request when a
+  ``serving.speculative.SpecDecoder`` drives the batch: ``None``
+  inherits the decoder's ``SpecConfig.k``; ``1`` opts the request out
+  (plain sequential decode); ``k >= 2`` drafts ``k - 1`` tokens per
+  iteration. Ignored under plain ``Engine.step``.
+
+``RequestOutput`` is the typed per-request slice of a decode iteration —
+``StepResult.outputs`` carries one per live request, replacing the
+ad-hoc dict poking the benches used to do on the raw slot->token dict
+(which remains, for compatibility). ``tokens`` holds every token the
+request emitted *this step* (speculative steps emit several), so
+consumers sum ``len(out.tokens)`` for throughput and read
+``finish_reason`` instead of re-deriving EOS/length/ctx from engine
+internals.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import List, Optional
+
+__all__ = ["SamplingParams", "RequestOutput"]
+
+
+@dataclasses.dataclass(frozen=True)
+class SamplingParams:
+    temperature: Optional[float] = None
+    seed: Optional[int] = None
+    eos_id: Optional[int] = None
+    max_tokens: Optional[int] = None
+    spec_k: Optional[int] = None
+
+    def __post_init__(self):
+        if self.temperature is not None and self.temperature < 0:
+            raise ValueError(f"temperature must be >= 0, got "
+                             f"{self.temperature}")
+        if self.max_tokens is not None and self.max_tokens < 1:
+            raise ValueError(f"max_tokens must be >= 1, got "
+                             f"{self.max_tokens}")
+        if self.spec_k is not None and self.spec_k < 1:
+            raise ValueError(f"spec_k must be >= 1, got {self.spec_k}")
+
+    def replace(self, **kw) -> "SamplingParams":
+        return dataclasses.replace(self, **kw)
+
+
+@dataclasses.dataclass
+class RequestOutput:
+    """One request's slice of a decode iteration (``StepResult.outputs``).
+
+    ``tokens`` are the tokens emitted this step in order (possibly empty
+    for a completion surfaced from prefill time, possibly several under
+    speculative decode); ``finished``/``finish_reason`` report terminal
+    state (``"eos"`` / ``"length"`` / ``"ctx"``); ``pj_per_token`` is the
+    decode-phase CIM energy per generated token (lazy thunk into the
+    engine's memo; None off the CIM path)."""
+    slot: int
+    tokens: List[int]
+    finished: bool = False
+    finish_reason: Optional[str] = None
+    _energy_fn: Optional[callable] = None
+
+    @property
+    def pj_per_token(self) -> Optional[float]:
+        return self._energy_fn() if self._energy_fn is not None else None

@@ -17,6 +17,17 @@ cache hit, and ``metrics()`` reports hit rate,
 cache counters. Traffic drivers: ``run_open_loop`` (Poisson offered
 load) and ``run_closed_loop`` (fixed client concurrency).
 
+Per-request knobs enter through ``SamplingParams``
+(``submit(prompt, params=...)``; legacy ``max_new_tokens``/``eos_id``
+kwargs convert under a DeprecationWarning), and every decode iteration
+emits a typed ``RequestOutput`` stream that the scheduler consumes
+instead of poking the slot->token dict — which is what lets
+``Scheduler(..., spec=SpecConfig(...))`` swap the sequential engine
+step for ``serving.speculative.SpecDecoder`` multi-token iterations
+without the bookkeeping noticing (the virtual clock charges draft/
+verify/repair dispatches one unit each, so speculation's fewer-
+dispatches-per-token win is visible in goodput-per-step).
+
 Queue states
 ------------
 ::
@@ -94,6 +105,7 @@ from __future__ import annotations
 
 import dataclasses
 import time
+import warnings
 from collections import deque
 from typing import Callable, Deque, Dict, List, Optional, Sequence
 
@@ -101,6 +113,7 @@ import jax
 import numpy as np
 
 from repro.serving.engine import Engine
+from repro.serving.params import SamplingParams
 
 __all__ = [
     "WAITING", "PREFILLING", "RUNNING", "PREEMPTED", "FINISHED",
@@ -127,9 +140,13 @@ class Request:
     preemptions."""
     rid: int
     prompt: List[int]
-    max_new_tokens: int
-    arrival: float
+    max_new_tokens: Optional[int] = None
+    arrival: float = 0.0
     eos_id: Optional[int] = None
+    # the request's full SamplingParams (the canonical knob record;
+    # max_new_tokens/eos_id above mirror it for compatibility)
+    params: SamplingParams = dataclasses.field(
+        default_factory=SamplingParams)
     state: str = WAITING
     slot: Optional[int] = None
     finish_reason: Optional[str] = None
@@ -203,13 +220,33 @@ class Scheduler:
     through."""
 
     def __init__(self, engine: Engine, cfg: SchedulerConfig = None, *,
-                 clock: Callable[[], float] = time.perf_counter):
+                 clock: Callable[[], float] = time.perf_counter,
+                 spec=None):
         if engine.cfg.prefill_mode != "bucketed":
             raise ValueError(
                 "scheduler requires prefill_mode='bucketed' (the token "
                 "oracle has no chunk seam to interleave through)")
         self.engine = engine
         self.cfg = cfg or SchedulerConfig()
+        # speculative decode: pass a SpecConfig (or a prebuilt
+        # SpecDecoder over this engine) and every decode iteration runs
+        # draft -> verify -> accept instead of one sequential step; the
+        # rest of the scheduler is oblivious (RequestOutput streams
+        # carry however many tokens a step emitted)
+        self._spec = None
+        if spec is not None:
+            from repro.serving.speculative import SpecConfig, SpecDecoder
+            if isinstance(spec, SpecDecoder):
+                if spec.engine is not engine:
+                    raise ValueError(
+                        "SpecDecoder is bound to a different engine")
+                self._spec = spec
+            elif isinstance(spec, SpecConfig):
+                self._spec = SpecDecoder(engine, spec)
+            else:
+                raise ValueError(
+                    f"spec must be a SpecConfig or SpecDecoder, got "
+                    f"{spec!r}")
         if self.cfg.admission not in ("fifo", "shortest_prompt"):
             raise ValueError(
                 f"unknown admission policy {self.cfg.admission!r} "
@@ -229,16 +266,38 @@ class Scheduler:
                       "recompute_tokens_saved": 0}
 
     # ------------------------------------------------------------ intake
-    def submit(self, prompt: Sequence[int], max_new_tokens: int,
+    def submit(self, prompt: Sequence[int],
+               max_new_tokens: Optional[int] = None,
                eos_id: Optional[int] = None,
-               arrival: Optional[float] = None) -> Request:
-        """Queue a request (state WAITING). ``arrival`` defaults to the
-        policy clock's now; open-loop traffic passes the trace's arrival
-        time so queueing delay is measured against the *offered* load."""
-        if max_new_tokens < 1:
+               arrival: Optional[float] = None, *,
+               params: Optional[SamplingParams] = None) -> Request:
+        """Queue a request (state WAITING). Per-request knobs arrive as a
+        ``SamplingParams`` (``params=``) — its ``max_tokens`` / ``eos_id``
+        / ``temperature`` / ``seed`` / ``spec_k`` are threaded to the
+        engine at admission. The legacy ``max_new_tokens``/``eos_id``
+        kwargs are accepted for one release under a DeprecationWarning
+        and convert to the equivalent params bit-identically. ``arrival``
+        defaults to the policy clock's now; open-loop traffic passes the
+        trace's arrival time so queueing delay is measured against the
+        *offered* load."""
+        if max_new_tokens is not None and max_new_tokens < 1:
             raise ValueError("max_new_tokens must be >= 1")
+        if params is not None:
+            if max_new_tokens is not None or eos_id is not None:
+                raise ValueError(
+                    "pass params= or the legacy max_new_tokens/eos_id "
+                    "kwargs, not both")
+        else:
+            if max_new_tokens is not None or eos_id is not None:
+                warnings.warn(
+                    "Scheduler.submit(max_new_tokens=..., eos_id=...) is "
+                    "deprecated; pass params=SamplingParams(max_tokens="
+                    "..., eos_id=...)", DeprecationWarning, stacklevel=2)
+            params = SamplingParams(max_tokens=max_new_tokens,
+                                    eos_id=eos_id)
         r = Request(rid=self._next_rid, prompt=list(prompt),
-                    max_new_tokens=int(max_new_tokens), eos_id=eos_id,
+                    max_new_tokens=params.max_tokens, eos_id=params.eos_id,
+                    params=params,
                     arrival=self.clock() if arrival is None else arrival,
                     wall_arrival=time.perf_counter())
         self._next_rid += 1
@@ -311,7 +370,14 @@ class Scheduler:
                     self._finish(r, "rejected", now, wall)
                 continue
             del self.waiting[idx]
-            r.slot = self.engine.begin_request(prompt, eos_id=r.eos_id)
+            p = r.params
+            if r.resume_prompt is not None and p.max_tokens is not None:
+                # recompute resume: tokens generated before eviction are
+                # part of the resume prompt, so the engine-side cap must
+                # count only what is still owed
+                p = p.replace(max_tokens=max(1, p.max_tokens
+                                             - r.n_generated))
+            r.slot = self.engine.begin_request(prompt, params=p)
             if r.resume_prompt is not None:
                 # preemption recompute that the prefix cache absorbed:
                 # the evicted lane's own boundary snapshots make the
@@ -346,9 +412,14 @@ class Scheduler:
             r.t_first = now
             r.wall_first = time.perf_counter()
             if not self.engine.active[r.slot]:
-                # first token was the EOS: engine freed the slot already
-                self._finish(r, "eos", now, r.wall_first)
-            elif r.n_generated >= r.max_new_tokens:
+                # engine finished it at prefill time (first token was the
+                # EOS, or a one-token max_tokens cap) and freed the slot
+                self._finish(r, self.engine.finish_reason(r.slot) or "eos",
+                             now, r.wall_first)
+            elif (r.max_new_tokens is not None
+                  and r.n_generated >= r.max_new_tokens):
+                # legacy fallback; params-carrying requests are capped
+                # inside the engine and never reach this branch
                 self.engine.release_slot(r.slot)
                 self._finish(r, "length", now, r.wall_first)
             else:
@@ -357,27 +428,37 @@ class Scheduler:
         return spent
 
     def _decode(self, now: float, key: Optional[jax.Array]) -> dict:
-        result = self.engine.step(key)
+        result = (self._spec.step(key) if self._spec is not None
+                  else self.engine.step(key))
         self._last_result = result
         self.stats["decode_steps"] += 1
         wall = time.perf_counter()
-        for slot, tok in result.items():
-            r = self.running.get(slot)
+        # the typed RequestOutput stream carries every token this
+        # iteration emitted (several per lane under speculative decode)
+        for out in result.outputs:
+            r = self.running.get(out.slot)
             if r is not None:
-                r.generated.append(tok)
+                r.generated.extend(out.tokens)
         for slot in result.finished:
-            # engine-side completion: EOS, or context exhaustion. Slots
-            # with no bound request (e.g. freed at prefill time and
-            # already accounted) are skipped.
+            # engine-side completion: EOS, max_tokens, or context
+            # exhaustion — the engine records which. Slots with no bound
+            # request (e.g. freed at prefill time and already accounted)
+            # are skipped.
             r = self.running.pop(slot, None)
             if r is None:
                 continue
-            eos = r.eos_id if r.eos_id is not None else self.engine.cfg.eos_id
-            reason = "eos" if (eos is not None and r.generated
-                               and r.generated[-1] == eos) else "ctx"
+            reason = self.engine.finish_reason(slot)
+            if reason is None:
+                eos = (r.eos_id if r.eos_id is not None
+                       else self.engine.cfg.eos_id)
+                reason = "eos" if (eos is not None and r.generated
+                                   and r.generated[-1] == eos) else "ctx"
             self._finish(r, reason, now, wall)
         for slot, r in list(self.running.items()):
-            if r.n_generated >= r.max_new_tokens:
+            # legacy fallback; params-carrying requests are capped inside
+            # the engine and surface through result.finished above
+            if (r.max_new_tokens is not None
+                    and r.n_generated >= r.max_new_tokens):
                 self.engine.release_slot(slot)
                 del self.running[slot]
                 self._finish(r, "length", now, wall)
@@ -502,6 +583,16 @@ class Scheduler:
             "prefill_tokens_saved": self.engine.stats["prefix_hit_tokens"],
             "recompute_tokens_saved": self.stats["recompute_tokens_saved"],
             "admission_reorders": self.stats["admission_reorders"],
+            # speculative-decode counters (all 0 without spec=): exact
+            # under StepClock, like the other scheduling leaves
+            "draft_dispatches": self.engine.stats["draft_dispatches"],
+            "verify_dispatches": self.engine.stats["verify_dispatches"],
+            "repair_dispatches": self.engine.stats["repair_dispatches"],
+            "spec_steps": self.engine.stats["spec_steps"],
+            "spec_tokens": self.engine.stats["spec_tokens"],
+            "accepted_tokens_per_step": (
+                self.engine.stats["spec_tokens"]
+                / max(1, self.engine.stats["spec_steps"])),
         }
         pc = self.engine.prefix_cache
         if pc is not None:
@@ -526,11 +617,12 @@ class StaticBatchScheduler(Scheduler):
     this."""
 
     def __init__(self, engine: Engine, cfg: SchedulerConfig = None, *,
-                 clock: Callable[[], float] = time.perf_counter):
+                 clock: Callable[[], float] = time.perf_counter,
+                 spec=None):
         cfg = dataclasses.replace(cfg or SchedulerConfig(),
                                   prefill_token_budget=None,
                                   preempt_age=None)
-        super().__init__(engine, cfg, clock=clock)
+        super().__init__(engine, cfg, clock=clock, spec=spec)
 
     def _admissible(self) -> int:
         if self.running or self.prefilling:
@@ -559,6 +651,18 @@ class StepClock:
 
     def tick(self, dt: Optional[float] = None) -> None:
         self.t += self.dt if dt is None else dt * self.dt
+
+
+def _dispatch_count(eng: Engine) -> int:
+    """Total compiled dispatches the engine has issued — the virtual
+    clock's cost unit. Speculative draft/verify/repair dispatches cost a
+    clock unit each, exactly like a decode step or a prefill chunk (they
+    are the same-shaped device work), so spec's latency win shows up as
+    fewer clock units per emitted token."""
+    s = eng.stats
+    return (s["prefill_dispatches"] + s["decode_steps"]
+            + s["draft_dispatches"] + s["verify_dispatches"]
+            + s["repair_dispatches"])
 
 
 @dataclasses.dataclass
@@ -643,7 +747,9 @@ def run_open_loop(sched: Scheduler, traffic: Sequence[TrafficRequest], *,
         now = sched.clock()
         while i < len(traffic) and traffic[i].arrival <= now:
             t = traffic[i]
-            sched.submit(t.prompt, t.max_new_tokens, arrival=t.arrival)
+            sched.submit(t.prompt, arrival=t.arrival,
+                         params=SamplingParams(
+                             max_tokens=t.max_new_tokens))
             i += 1
         if i >= len(traffic) and sched.idle():
             return steps
@@ -656,14 +762,12 @@ def run_open_loop(sched: Scheduler, traffic: Sequence[TrafficRequest], *,
             continue
         key, sub = ((None, None) if key is None
                     else jax.random.split(key))
-        before = (sched.engine.stats["prefill_dispatches"],
-                  sched.engine.stats["decode_steps"])
+        before = _dispatch_count(sched.engine)
         sched.step(sub)
-        after = (sched.engine.stats["prefill_dispatches"],
-                 sched.engine.stats["decode_steps"])
+        after = _dispatch_count(sched.engine)
         steps += 1
         if tick is not None:
-            tick(max(1.0, float(sum(after) - sum(before))))
+            tick(max(1.0, float(after - before)))
         if steps >= max_steps:
             raise RuntimeError(
                 f"open-loop run exceeded {max_steps} steps with "
@@ -692,20 +796,19 @@ def run_closed_loop(sched: Scheduler, traffic: Sequence[TrafficRequest], *,
     while True:
         while i < len(traffic) and (i - len(sched.finished)) < concurrency:
             t = traffic[i]
-            sched.submit(t.prompt, t.max_new_tokens)
+            sched.submit(t.prompt, params=SamplingParams(
+                max_tokens=t.max_new_tokens))
             i += 1
         if i >= len(traffic) and sched.idle():
             return steps
         key, sub = ((None, None) if key is None
                     else jax.random.split(key))
-        before = (sched.engine.stats["prefill_dispatches"],
-                  sched.engine.stats["decode_steps"])
+        before = _dispatch_count(sched.engine)
         sched.step(sub)
-        after = (sched.engine.stats["prefill_dispatches"],
-                 sched.engine.stats["decode_steps"])
+        after = _dispatch_count(sched.engine)
         steps += 1
         if tick is not None:
-            tick(max(1.0, float(sum(after) - sum(before))))
+            tick(max(1.0, float(after - before)))
         if steps >= max_steps:
             raise RuntimeError(
                 f"closed-loop run exceeded {max_steps} steps with "

@@ -1,0 +1,360 @@
+"""Self-speculative multi-token decode with exact GR-MAC verification.
+
+Sequential decode is one full-batch dispatch per token — the last TTLT
+lever after chunked prefill (PR 2) and prefix-cache reuse (PR 9). This
+module drafts ``k - 1`` tokens per iteration with a *cheap configuration
+of the same model* and verifies all of them in ONE chunked dispatch
+through the exact serving path, keeping the longest accepted prefix.
+Because drafting is self-speculative (same weights, same cache — only
+the CIM numerics config differs), there is no second model, no draft
+prefill, and no separate draft cache to manage.
+
+Draft policies (``SpecConfig.draft``)
+-------------------------------------
+* ``"digital"`` — the same arch with ``cim.with_mode("off")``: drafting
+  runs the plain digital matmul path (cheap in pJ terms vs grmac, and
+  the natural drafter the ROADMAP names).
+* ``"self"``    — the target arch itself: drafts are exact, so greedy
+  acceptance is 100% (structurally — the draft executable IS the serving
+  decode executable). The deterministic always-accept cell the bench
+  exact-gates.
+* a ``site_overrides`` dict / ``CIMConfig`` / full ``ArchConfig`` — an
+  aggressive low-energy deployment point straight off the PR-5 Pareto
+  front, drafting through analog numerics at a fraction of the energy.
+
+Acceptance rule
+---------------
+Greedy (the bit-exactness story): the verify chunk is
+``[pending_token, d_1 .. d_{k-1}]`` fed through the *existing* bucketed
+prefill executable — ``models.prefill_step`` returns per-position argmax
+ids, so position ``j``'s id is the target model's greedy continuation
+given the lane's context plus drafts ``d_1..d_j``. The accepted count is
+``a = 1 + (length of the longest draft prefix matching those ids)``; the
+emitted tokens are the ids' first ``a`` entries (accepted drafts are
+*equal* to them; the last one is the correction at the first mismatch,
+or the free bonus token after full acceptance). By induction each
+emitted token is conditioned only on accepted-and-therefore-correct
+inputs, so greedy speculative streams are **bit-identical to sequential
+decode** — across attn / rglru / ssm / moe, regardless of how bad the
+drafter is (tested per family).
+
+Sampled: drafts stay greedy, i.e. a *delta* proposal at the draft
+argmax, so the standard speculative rejection rule reduces to: accept
+``d_j`` with probability ``p(d_j)`` under the target softmax at that
+position; at the first rejection resample from ``p`` with the rejected
+token's probability zeroed (the renormalized residual), else sample the
+bonus token from the next-position target distribution. This is
+unbiased — the emitted stream is distributed exactly as sequential
+sampling — but not bit-identical to it (different PRNG event order);
+``engine._verify_raw`` runs the whole rule on device behind the same
+seam, one packed fetch. Mixed batches work: lanes with temperature 0
+get exact greedy acceptance inside the sampled executable.
+
+Rollback semantics (the recurrent-arch part)
+--------------------------------------------
+Drafting and verifying write cache state for tokens that may be
+rejected. What needs rolling back is exactly what a *stale write* can
+corrupt:
+
+* **Global attention KV: nothing.** Rows past a lane's committed length
+  are causally masked (decode reads ``slot <= idx``, prefill masks
+  ``q_pos >= k_pos``) and are positionally overwritten before the
+  committed length ever reaches them — rejected-token rows are
+  invisible by construction (MoE FFNs are stateless, so grok rides the
+  same argument).
+* **Local-attention ring buffers: snapshot/restore.** A ring write at
+  ``pos % window`` *destroys a valid older row* — masking cannot undo
+  that, so rings roll back.
+* **RG-LRU / SSM recurrent + conv states: snapshot/restore.** The
+  whole point of ISSUE/ROADMAP item 3 — the recurrent state mutates on
+  every pass and has no positional addressing to hide behind. It is
+  also tiny (one (B, D)-ish tensor per layer), which is what makes
+  self-speculation on recurrent archs cheap here while GPU serving
+  stacks mostly skip them.
+
+``Engine.spec_snapshot`` captures references to exactly those subtrees
+(jax arrays are immutable — O(1), no copy); ``spec_restore`` is a
+per-lane device-side where-merge. The step then is::
+
+    S0 = snapshot → draft k-1 greedy decode dispatches (draft lanes
+    masked) → restore S0 (undo draft pollution) → ONE verify chunk
+    dispatch → host acceptance → for partially-accepted live lanes:
+    restore S0 again + ONE repair dispatch re-feeding each lane's
+    accepted prefix (per-lane ``chunk_lengths``, 0 = bitwise frozen) at
+    its pre-verify offset.
+
+The repair dispatch reuses the same bucket executable and fetches
+nothing (acceptance already knows every token) — ``invariants.
+run_spec_invariants`` proves both the zero-new-compiles claim and the
+fetch arithmetic ``fetches == admissions + drafts + verifies``. For
+pure global-attention archs the snapshot is empty and restore/repair
+are skipped entirely: speculation there is rollback-free.
+
+Energy accounting (``price_speculation``)
+-----------------------------------------
+The CostLedger answers whether speculation is a pJ/token win, not just
+a latency win. Convention: marginal per-lane energy, matching
+``Engine.energy_per_token`` — sequential decode costs
+``price_ledger(trace_decode(arch), 1)`` pJ/token; a draft dispatch
+costs the draft arch's decode pJ/token (a digital draft is priced at
+the target ledger's *conventional* fJ/op); a verify or repair dispatch
+costs ``price_ledger(trace_prefill(arch, bucket), bucket) × bucket``
+(the bucket is padded, and padded positions burn real energy — the
+honest denominator). Then::
+
+    spec_pJ/accepted = (draft_dispatches × draft_pJ
+                        + (verify + repair dispatches) × chunk_pJ)
+                       / accepted_tokens
+
+measured counters in, deterministic seeded-MC ENOB pricing out — the
+bench gates the boolean verdict exactly and reports the floats.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Optional, Union
+
+import jax
+import numpy as np
+
+from repro.configs.base import ArchConfig
+from repro.core import costs
+from repro.core.cim_config import CIMConfig
+from repro.serving.engine import Engine, RequestOutput, StepResult
+
+__all__ = ["SpecConfig", "SpecDecoder", "draft_arch_for",
+           "price_speculation"]
+
+
+DraftPolicy = Union[str, dict, CIMConfig, ArchConfig]
+
+
+def draft_arch_for(arch: ArchConfig, draft: DraftPolicy) -> ArchConfig:
+    """Resolve a ``SpecConfig.draft`` policy to the draft ArchConfig.
+    Every policy keeps the model itself (weights, cache layout) — only
+    the CIM numerics config may differ."""
+    if isinstance(draft, str):
+        if draft == "self":
+            return arch
+        if draft == "digital":
+            return arch.replace(cim=arch.cim.with_mode("off"))
+        raise ValueError(
+            f"unknown draft policy {draft!r} (choices: 'self', 'digital', "
+            "a site_overrides dict, a CIMConfig, or an ArchConfig)")
+    if isinstance(draft, dict):
+        return arch.replace(cim=arch.cim.with_site_overrides(draft))
+    if isinstance(draft, CIMConfig):
+        return arch.replace(cim=draft)
+    if isinstance(draft, ArchConfig):
+        if (draft.n_layers, draft.d_model, draft.block_pattern) != \
+                (arch.n_layers, arch.d_model, arch.block_pattern):
+            raise ValueError(
+                "draft ArchConfig must be the same model as the target "
+                "(self-speculation shares weights and cache)")
+        return draft
+    raise ValueError(f"unsupported draft policy: {draft!r}")
+
+
+@dataclasses.dataclass
+class SpecConfig:
+    """Speculative-decode policy. ``k`` is the default number of tokens
+    scored per lane per iteration (1 pending + ``k - 1`` drafts; a
+    request's ``SamplingParams.spec_k`` overrides it, ``spec_k=1`` opts
+    the request out). ``draft`` picks the drafter — see module
+    docstring."""
+    k: int = 4
+    draft: DraftPolicy = "digital"
+
+    def __post_init__(self):
+        if self.k < 2:
+            raise ValueError(f"SpecConfig.k must be >= 2, got {self.k}")
+
+
+class SpecDecoder:
+    """Drop-in multi-token replacement for ``Engine.step``: each
+    ``step()`` emits between 1 and ``k`` tokens per live lane through
+    draft → verify → accept → (restore + repair). The scheduler drives
+    it exactly like the engine (``Scheduler(..., spec=...)``).
+
+    ``draft_fn`` is a test seam: a callable ``(cur_tokens (B,), t) ->
+    (B,) int32`` replacing the draft dispatches entirely (deterministic
+    forced mismatches for the rollback tests). With it, no draft
+    pollution ever reaches the cache, so the pre-verify restore is
+    skipped."""
+
+    def __init__(self, engine: Engine, cfg: Optional[SpecConfig] = None,
+                 *, draft_fn: Optional[Callable] = None):
+        self.engine = engine
+        self.cfg = cfg or SpecConfig()
+        self.draft_arch = draft_arch_for(engine.arch, self.cfg.draft)
+        self.draft_fn = draft_fn
+
+    # ----------------------------------------------------------- stepping
+    def _lane_budgets(self) -> np.ndarray:
+        """Per-lane chunk sizes k_i: the request's spec_k (or the default
+        k), capped so the verify never writes past max_ctx and never
+        emits past the request's max_tokens; floor 1 (sequential)."""
+        eng = self.engine
+        k_arr = np.ones(eng.cfg.batch_slots, np.int64)
+        for s in np.where(eng.active)[0]:
+            k = int(eng._spec_k[s]) if eng._spec_k[s] >= 1 else self.cfg.k
+            k = min(k, eng.cfg.max_ctx - int(eng.lengths[s]))
+            if eng._max_toks[s] >= 0:
+                k = min(k, int(eng._max_toks[s] - eng._emitted[s]))
+            k_arr[s] = max(1, k)
+        return k_arr
+
+    def step(self, key: Optional[jax.Array] = None) -> StepResult:
+        """One speculative iteration over every active slot. Returns a
+        ``StepResult`` shaped exactly like ``Engine.step``'s — the dict
+        maps each live slot to its *last* token this step, while
+        ``outputs`` carries every emitted token per request — so
+        scheduler/bench consumers are oblivious to how many tokens a
+        step produced. Falls through to plain ``Engine.step`` when no
+        lane has speculation budget (all k_i == 1)."""
+        eng = self.engine
+        if not eng.active.any():
+            return eng.step(key)
+        k_arr = self._lane_budgets()
+        if int(k_arr.max()) <= 1:
+            return eng.step(key)
+        pending, outputs = eng._drain_pending()
+        act = eng.active.copy()
+        base_len = eng.lengths.copy()
+        spec = act & (k_arr > 1)
+        n_draft = int(k_arr.max()) - 1
+
+        # --- draft: n_draft greedy decode dispatches on the shared cache
+        snap = eng.spec_snapshot()
+        cur = eng._last_host.copy()
+        drafts = np.zeros((n_draft, eng.cfg.batch_slots), np.int32)
+        drafted = False
+        for t in range(n_draft):
+            mask = spec & ((k_arr - 1) > t)
+            if self.draft_fn is not None:
+                ids = np.asarray(self.draft_fn(cur.copy(), t), np.int32)
+            else:
+                offs = np.minimum(base_len + t, eng.cfg.max_ctx - 1)
+                ids = eng.draft_step(self.draft_arch, cur, mask, offs)
+                drafted = True
+            drafts[t] = np.where(mask, ids, 0)
+            cur = np.where(mask, ids, cur)
+        if drafted:
+            # undo draft-numerics pollution of rings/recurrent states
+            # before the exact verify re-feeds the same positions
+            eng.spec_restore(snap, spec)
+
+        # --- verify: ONE chunked dispatch through the exact target path
+        kmax = int(k_arr.max())
+        chunk = np.zeros((eng.cfg.batch_slots, kmax), np.int32)
+        chunk[:, 0] = eng._last_host
+        for t in range(n_draft):
+            chunk[:, t + 1] = drafts[t]
+        lens = np.where(act, k_arr, 0).astype(np.int32)
+        eff = eng._effective_temps(key)
+        if bool((eff[act] > 0).any()):
+            emitted_arr, a_arr = eng.verify_chunk_sampled(chunk, lens, key)
+            a_arr = a_arr.astype(np.int64)
+        else:
+            tgt = eng.verify_chunk(chunk, lens)
+            a_arr = np.zeros(eng.cfg.batch_slots, np.int64)
+            emitted_arr = np.zeros_like(chunk)
+            for s in np.where(act)[0]:
+                m = 0
+                while m < k_arr[s] - 1 and chunk[s, m + 1] == tgt[s, m]:
+                    m += 1
+                a_arr[s] = m + 1
+                # accepted drafts ARE the target ids; entry m is the
+                # correction (first mismatch) or the bonus (all matched)
+                emitted_arr[s, :m + 1] = tgt[s, :m + 1]
+
+        # --- commit accepted prefixes; collect repairs
+        out = {}
+        finished = list(pending)
+        repair_mask = np.zeros(eng.cfg.batch_slots, bool)
+        repair_lens = np.zeros(eng.cfg.batch_slots, np.int32)
+        total = 0
+        for s in np.where(act)[0]:
+            s = int(s)
+            a = int(a_arr[s])
+            toks_s = [int(x) for x in emitted_arr[s, :a]]
+            reason = None
+            eos = int(eng._eos[s])
+            if eos >= 0 and eos in toks_s:
+                a = toks_s.index(eos) + 1
+                toks_s = toks_s[:a]
+                reason = "eos"
+            eng.tokens[s].extend(toks_s)
+            eng.lengths[s] += a
+            eng._emitted[s] += a
+            eng._last_host[s] = toks_s[-1]
+            out[s] = toks_s[-1]
+            total += a
+            if reason is None:
+                if 0 <= eng._max_toks[s] <= eng._emitted[s]:
+                    reason = "length"
+                elif eng.lengths[s] >= eng.cfg.max_ctx:
+                    reason = "ctx"
+            if reason is not None:
+                eng._finish_reason[s] = reason
+                eng.active[s] = False
+                finished.append(s)
+            elif a < int(k_arr[s]):
+                # live lane accepted a strict prefix: its recurrent/ring
+                # state ran past the commit point — roll back + repair.
+                # (Finished lanes skip this: a freed slot is zeroed on
+                # its next claim anyway.)
+                repair_mask[s] = True
+                repair_lens[s] = a
+            outputs.append(RequestOutput(
+                slot=s, tokens=toks_s, finished=reason is not None,
+                finish_reason=reason, _energy_fn=eng._pj_per_token))
+        if repair_mask.any() and snap:
+            eng.spec_restore(snap, repair_mask)
+            eng.repair_chunk(chunk, repair_lens, base_len)
+        eng.stats["spec_steps"] += 1
+        eng.stats["spec_tokens"] += total
+        return StepResult(out, finished, eng._pj_per_token,
+                          outputs=outputs)
+
+
+# ------------------------------------------------------------------ energy
+def price_speculation(arch: ArchConfig, draft_arch: ArchConfig,
+                      stats: dict, verify_bucket: int, *,
+                      seed: int = 0, n_cols: int = 1 << 11) -> dict:
+    """pJ/accepted-token of draft+verify vs sequential decode, priced
+    from *measured* dispatch counters (``Engine.stats``) and the
+    CostLedger traces of the real model fns — the module docstring
+    carries the conventions. Deterministic for fixed (arch, counters,
+    seed), so the bench exact-gates the ``energy_win`` verdict."""
+    if not arch.cim.enabled:
+        return {"enabled": False}
+    dec = costs.price_ledger(costs.trace_decode(arch), 1,
+                             seed=seed, n_cols=n_cols)
+    pre = costs.price_ledger(
+        costs.trace_prefill(arch, bucket=verify_bucket), verify_bucket,
+        seed=seed, n_cols=n_cols)
+    if draft_arch.cim.enabled:
+        draft_pj = costs.price_ledger(costs.trace_decode(draft_arch), 1,
+                                      seed=seed,
+                                      n_cols=n_cols)["pj_per_token"]
+    else:
+        # digital draft: the same ops at the conventional (digital)
+        # energy point of the target's ledger
+        draft_pj = dec["conventional_pj_per_token"]
+    chunk_pj = pre["pj_per_token"] * verify_bucket
+    accepted = max(1, int(stats["spec_tokens"]))
+    steps = max(1, int(stats["spec_steps"]))
+    spec_pj = (stats["draft_dispatches"] * draft_pj
+               + (stats["verify_dispatches"]
+                  + stats["repair_dispatches"]) * chunk_pj) / accepted
+    return {
+        "enabled": True,
+        "verify_bucket": verify_bucket,
+        "seq_pj_per_token": dec["pj_per_token"],
+        "draft_pj_per_dispatch": draft_pj,
+        "verify_pj_per_dispatch": chunk_pj,
+        "spec_pj_per_accepted_token": spec_pj,
+        "accepted_tokens_per_step": stats["spec_tokens"] / steps,
+        "energy_win": bool(spec_pj < dec["pj_per_token"]),
+    }

@@ -180,7 +180,7 @@ def test_prefill_step_frozen_lane_bitwise():
     # advance lane 1 first so its state is nonzero
     toks = np.zeros((2, 8), np.int32)
     toks[1, :] = np.arange(1, 9)
-    _, cache = jax.jit(
+    _, _, cache = jax.jit(
         lambda p, t, c, i, l: prefill_step(p, t, arch, c, i, l))(
         params, toks, cache, np.zeros(2, np.int32),
         np.array([0, 8], np.int32))
@@ -188,7 +188,7 @@ def test_prefill_step_frozen_lane_bitwise():
     # now prefill lane 0; lane 1 must be untouched
     toks2 = np.zeros((2, 8), np.int32)
     toks2[0, :5] = [9, 8, 7, 6, 5]
-    _, cache2 = jax.jit(
+    _, _, cache2 = jax.jit(
         lambda p, t, c, i, l: prefill_step(p, t, arch, c, i, l))(
         params, toks2, cache, np.array([0, 8], np.int32),
         np.array([5, 0], np.int32))

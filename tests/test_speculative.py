@@ -1,0 +1,280 @@
+"""Speculative-decode correctness net: greedy draft/verify/accept must be
+bit-identical to sequential decode on every cache family (the recurrent
+snapshot->verify->restore rollback is the part that can silently rot),
+speculation must compose with max_tokens caps, EOS mid-chunk, preemption
+recompute-resume, and prefix-cache adoption, and the sampled acceptance
+rule must keep seeded lanes reproducible and temperature-0 lanes exact."""
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.models import init_params
+from repro.serving.engine import Engine, ServeConfig
+from repro.serving.params import SamplingParams
+from repro.serving.scheduler import (Scheduler, SchedulerConfig, StepClock,
+                                     run_open_loop,
+                                     synth_shared_prefix_traffic,
+                                     synth_traffic)
+from repro.serving.speculative import (SpecConfig, SpecDecoder,
+                                       draft_arch_for, price_speculation)
+
+ARCHS = [
+    ("attn", "qwen2-1.5b"),
+    ("rglru", "recurrentgemma-9b"),   # rglru + local ring layers
+    ("ssm", "mamba2-1.3b"),
+    ("moe", "grok-1-314b"),
+]
+
+
+def _setup(name, seed=0):
+    arch = get_config(name).reduced()
+    params = init_params(jax.random.PRNGKey(seed), arch)
+    return arch, params
+
+
+def _seq_tokens(arch, params, prompt, n, **req_kw):
+    eng = Engine(arch, params, ServeConfig(batch_slots=2, max_ctx=64))
+    slot = eng.add_request(prompt, params=SamplingParams(**req_kw))
+    while eng.active[slot] and len(eng.tokens[slot]) - len(prompt) < n:
+        eng.step()
+    return eng.tokens[slot][len(prompt):][:n], eng.finish_reason(slot)
+
+
+def _spec_tokens(arch, params, prompt, n, spec_cfg, draft_fn=None,
+                 max_steps=64, **req_kw):
+    eng = Engine(arch, params, ServeConfig(batch_slots=2, max_ctx=64))
+    dec = SpecDecoder(eng, spec_cfg, draft_fn=draft_fn)
+    slot = eng.add_request(prompt, params=SamplingParams(**req_kw))
+    toks = list(eng.tokens[slot][len(prompt):])   # prefill-sampled first
+    for _ in range(max_steps):
+        if len(toks) >= n or not eng.active[slot]:
+            break
+        r = dec.step()
+        for o in r.outputs:
+            if o.slot == slot:
+                toks.extend(o.tokens)
+    return toks[:n], eng, eng.finish_reason(slot)
+
+
+@pytest.mark.parametrize("label,name", ARCHS)
+def test_greedy_spec_bitwise_digital_draft(label, name):
+    """Greedy speculative output == sequential decode, bit for bit, with
+    the digital (CIM-off numerics) drafter on every cache family."""
+    arch, params = _setup(name)
+    prompt = [int(t) for t in
+              np.random.RandomState(0).randint(1, arch.vocab_size, 7)]
+    ref, _ = _seq_tokens(arch, params, prompt, 12)
+    got, eng, _ = _spec_tokens(arch, params, prompt, 12,
+                               SpecConfig(k=4, draft="digital"))
+    assert got == ref, (label, got, ref)
+    assert eng.stats["spec_steps"] > 0
+    assert eng.stats["verify_dispatches"] == eng.stats["spec_steps"]
+
+
+@pytest.mark.parametrize("label,name", [("rglru", "recurrentgemma-9b"),
+                                        ("ssm", "mamba2-1.3b")])
+def test_forced_rejection_rollback(label, name):
+    """An adversarial drafter that is ALWAYS wrong forces a rollback +
+    repair on every step — the recurrent/ring state must come back
+    exactly, so the stream still equals sequential decode."""
+    arch, params = _setup(name)
+    prompt = [int(t) for t in
+              np.random.RandomState(1).randint(1, arch.vocab_size, 6)]
+    ref, _ = _seq_tokens(arch, params, prompt, 10)
+
+    def bad_draft(cur, t):
+        # drafting the sequential token + 1 mod vocab is always a mismatch
+        ref_next = np.asarray(ref, np.int64)
+        return ((cur + 1) % arch.vocab_size).astype(np.int32)
+
+    got, eng, _ = _spec_tokens(arch, params, prompt, 10,
+                               SpecConfig(k=4, draft="self"),
+                               draft_fn=bad_draft)
+    assert got == ref, (label, got, ref)
+    # every accepted count is exactly 1 (correction token only), and every
+    # live partial acceptance repaired the recurrent state
+    assert eng.stats["spec_tokens"] == eng.stats["spec_steps"]
+    assert eng.stats["repair_dispatches"] > 0
+    assert eng.stats["draft_dispatches"] == 0   # seam bypasses dispatches
+
+
+def test_self_draft_full_acceptance():
+    """The self drafter runs the target's own decode executable, so greedy
+    acceptance is structurally total: k tokens per step, zero repairs."""
+    arch, params = _setup("qwen2-1.5b")
+    prompt = [3, 1, 4, 1, 5]
+    ref, _ = _seq_tokens(arch, params, prompt, 12)
+    got, eng, _ = _spec_tokens(arch, params, prompt, 12,
+                               SpecConfig(k=4, draft="self"))
+    assert got == ref
+    assert eng.stats["spec_tokens"] == 4 * eng.stats["spec_steps"]
+    assert eng.stats["repair_dispatches"] == 0
+    assert eng.stats["draft_dispatches"] == 3 * eng.stats["spec_steps"]
+
+
+def test_spec_eos_mid_chunk():
+    """An EOS accepted in the middle of a verify chunk truncates the
+    emission there and frees the lane with reason "eos"."""
+    arch, params = _setup("qwen2-1.5b")
+    prompt = [5, 6, 7, 8]
+    ref, _ = _seq_tokens(arch, params, prompt, 8)
+    eos = ref[5]           # sequential emits this mid-way through a chunk
+    ref_eos, reason = _seq_tokens(arch, params, prompt, 8, eos_id=eos)
+    assert reason == "eos"
+    got, eng, sreason = _spec_tokens(arch, params, prompt, 8,
+                                     SpecConfig(k=4, draft="self"),
+                                     eos_id=eos)
+    assert got == ref_eos
+    assert sreason == "eos"
+    assert got[-1] == eos
+
+
+def test_spec_max_tokens_cap_frees_slot():
+    """A request capped at max_tokens emits exactly that many under
+    speculation (a chunk never overshoots the cap), finishes "length",
+    and its slot is immediately reclaimable."""
+    arch, params = _setup("mamba2-1.3b")
+    prompt = [2, 7, 1, 8]
+    ref, _ = _seq_tokens(arch, params, prompt, 10)
+    got, eng, reason = _spec_tokens(arch, params, prompt, 10,
+                                    SpecConfig(k=4, draft="self"),
+                                    max_tokens=5)
+    assert got == ref[:5]
+    assert reason == "length"
+    assert eng.free_slots() == eng.cfg.batch_slots
+    s2 = eng.add_request([9, 9, 2])       # slot reuse after a spec finish
+    r = SpecDecoder(eng, SpecConfig(k=3, draft="self")).step()
+    assert any(o.slot == s2 and o.tokens for o in r.outputs)
+
+
+def test_spec_k_per_request_override():
+    """SamplingParams.spec_k overrides the decoder default per lane:
+    spec_k=1 opts out (one token per step), spec_k=3 drafts 2."""
+    arch, params = _setup("qwen2-1.5b")
+    eng = Engine(arch, params, ServeConfig(batch_slots=2, max_ctx=64))
+    dec = SpecDecoder(eng, SpecConfig(k=4, draft="self"))
+    s0 = eng.add_request([1, 2, 3], params=SamplingParams(spec_k=1))
+    s1 = eng.add_request([4, 5, 6], params=SamplingParams(spec_k=3))
+    r = dec.step()
+    per_slot = {o.slot: len(o.tokens) for o in r.outputs}
+    assert per_slot[s0] == 1
+    assert per_slot[s1] == 3
+
+
+def test_spec_preemption_resume():
+    """Speculation composes with recompute preemption: greedy streams are
+    preemption-invariant, so an overloaded spec run must emit the same
+    tokens as an uncontended sequential run."""
+    arch, params = _setup("recurrentgemma-9b")
+    traffic = synth_traffic(6, 2.0, seed=5, vocab_size=arch.vocab_size,
+                            prompt_len=(4, 10), out_len=(6, 10))
+
+    def run(spec, slots, preempt_age):
+        eng = Engine(arch, params, ServeConfig(batch_slots=slots,
+                                               max_ctx=64))
+        clk = StepClock()
+        sched = Scheduler(eng, SchedulerConfig(preempt_age=preempt_age),
+                          clock=clk.now, spec=spec)
+        run_open_loop(sched, traffic, tick=clk.tick)
+        return ({r.rid: list(r.generated) for r in sched.finished},
+                sched.stats["preempted"])
+
+    ref, _ = run(None, slots=4, preempt_age=None)
+    got, preempted = run(SpecConfig(k=4, draft="self"), slots=1,
+                         preempt_age=1.0)
+    assert preempted > 0          # the drill actually preempted
+    assert got == ref
+
+
+def test_spec_prefix_cache_adoption():
+    """Speculation composes with prefix-cache adoption: shared-prefix
+    traffic served spec + cache emits the same streams as sequential
+    cache-off, while actually hitting the cache."""
+    arch, params = _setup("qwen2-1.5b")
+    traffic = synth_shared_prefix_traffic(
+        6, 1.0, seed=2, vocab_size=arch.vocab_size, n_prefixes=2,
+        prefix_len=16, user_len=(2, 6), out_len=(4, 8))
+
+    def run(spec, cache_bytes):
+        eng = Engine(arch, params,
+                     ServeConfig(batch_slots=2, max_ctx=64,
+                                 prefix_cache_bytes=cache_bytes))
+        clk = StepClock()
+        # budget 8 slices prefill at cache-chunk boundaries, so the
+        # shared prefixes actually get inserted (single-chunk prefills
+        # never cross an interior boundary)
+        sched = Scheduler(eng, SchedulerConfig(prefill_token_budget=8),
+                          clock=clk.now, spec=spec)
+        run_open_loop(sched, traffic, tick=clk.tick)
+        return ({r.rid: list(r.generated) for r in sched.finished},
+                eng.stats["prefix_hit_tokens"])
+
+    ref, _ = run(None, None)
+    got, hit = run(SpecConfig(k=4, draft="self"), 64 << 20)
+    assert hit > 0
+    assert got == ref
+
+
+def test_sampled_spec_seeded_and_mixed():
+    """Sampled acceptance: a seeded lane's stream is reproducible across
+    runs and differs across seeds; a temperature-0 lane in the same batch
+    gets exact greedy acceptance inside the sampled verify."""
+    arch, params = _setup("recurrentgemma-9b")
+
+    def run(seed):
+        eng = Engine(arch, params, ServeConfig(batch_slots=2, max_ctx=64))
+        dec = SpecDecoder(eng, SpecConfig(k=4, draft="self"))
+        s0 = eng.add_request([3, 1, 4], params=SamplingParams(
+            temperature=0.9, seed=seed))
+        s1 = eng.add_request([2, 7, 1], params=SamplingParams(
+            temperature=0.0))
+        t0 = list(eng.tokens[s0][3:])    # prefill-sampled first tokens
+        t1 = list(eng.tokens[s1][3:])
+        for i in range(6):
+            r = dec.step(jax.random.PRNGKey(i))
+            for o in r.outputs:
+                (t0 if o.slot == s0 else t1).extend(o.tokens)
+        return t0[:6], t1[:8]
+
+    a0, a1 = run(42)
+    b0, b1 = run(42)
+    c0, _ = run(7)
+    ref, _ = _seq_tokens(arch, params, [2, 7, 1], 8)
+    assert a0 == b0
+    assert a0 != c0
+    assert a1 == ref
+    assert all(0 <= t < arch.vocab_size for t in a0 + c0)
+
+
+def test_draft_arch_resolution():
+    arch = get_config("qwen2-1.5b").reduced()
+    cim_on = arch.replace(cim=arch.cim.with_mode("grmac"))
+    assert draft_arch_for(cim_on, "self") is cim_on
+    dig = draft_arch_for(cim_on, "digital")
+    assert not dig.cim.enabled
+    other = get_config("mamba2-1.3b").reduced()
+    with pytest.raises(ValueError):
+        draft_arch_for(cim_on, other)     # different model: no shared cache
+    with pytest.raises(ValueError):
+        draft_arch_for(cim_on, "turbo")
+    with pytest.raises(ValueError):
+        SpecConfig(k=1)
+
+
+def test_price_speculation_verdict():
+    """The energy account prices measured counters deterministically: a
+    digital drafter with high acceptance must beat sequential grmac
+    decode; the disabled-CIM case reports enabled=False."""
+    arch = get_config("qwen2-1.5b").reduced()
+    cim = arch.replace(cim=arch.cim.with_mode("grmac"))
+    stats = {"draft_dispatches": 30, "verify_dispatches": 10,
+             "repair_dispatches": 0, "spec_steps": 10, "spec_tokens": 40}
+    rep = price_speculation(cim, draft_arch_for(cim, "digital"), stats, 4,
+                            n_cols=1 << 8)
+    assert rep["enabled"]
+    assert rep["accepted_tokens_per_step"] == 4.0
+    rep2 = price_speculation(cim, draft_arch_for(cim, "digital"), stats, 4,
+                             n_cols=1 << 8)
+    assert rep == rep2                     # deterministic pricing
+    assert price_speculation(arch, arch, stats, 4) == {"enabled": False}
